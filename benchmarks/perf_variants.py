@@ -1,0 +1,92 @@
+"""§Perf variant runner: lower a cell under config overrides and report the
+three roofline terms — the measurement half of the hypothesis loop.
+
+  PYTHONPATH=src python -m benchmarks.perf_variants qwen3-8b decode_32k \
+      kv_cache_dtype=int8 serve_bf16=1
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+
+def run(arch: str, shape: str, overrides: dict, serve_bf16: bool = False):
+    from repro import configs
+    from repro.models import api as model_api
+    from repro.models.arch_config import SHAPES
+    from repro.launch import sharding as shd
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.train_step import (make_decode_step, make_prefill_step,
+                                         make_train_step)
+    from repro.launch.dryrun import _opt_state_specs
+    from repro.models.api import to_shape_tree
+    from repro.train import optim
+
+    c = configs.get(arch)
+    if overrides:
+        c = c.replace(**overrides)
+    cell = SHAPES[shape]
+    model = model_api.build(c)
+    mesh = make_production_mesh(multi_pod=False)
+    rules = {"embed_act": "model"} if c.shard_residual_embed else {}
+    with shd.use_mesh(mesh, rules):
+        pspecs = to_shape_tree(model.decls)
+        if serve_bf16:
+            # serving deployments store bf16 weights (no optimizer on box)
+            pspecs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                if s.dtype == jnp.float32 and len(s.shape) >= 2 else s, pspecs)
+        if cell.kind == "train":
+            opt_cfg = optim.OptimConfig(name=c.optimizer)
+            step, in_sh, out_sh, _ = make_train_step(model, opt_cfg, cell, mesh)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(0, 1)).lower(
+                pspecs, _opt_state_specs(c, model, pspecs),
+                model.input_specs(cell))
+        elif cell.kind == "prefill":
+            step, in_sh, out_sh = make_prefill_step(model, cell, mesh)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh
+                              ).lower(pspecs, model.input_specs(cell))
+        else:
+            step, in_sh, out_sh = make_decode_step(model, cell, mesh)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(2,)).lower(
+                pspecs, model.input_specs(cell)["token"],
+                model.decode_state_specs(cell))
+        compiled = lowered.compile()
+    a = hlo_cost.analyze(compiled.as_text())
+    out = {
+        "arch": arch, "shape": shape, "overrides": overrides,
+        "serve_bf16": serve_bf16,
+        "compute_s": a["flops_per_device"] / 197e12,
+        "memory_s": a["bytes_per_device"] / 819e9,
+        "collective_s": a["collective_bytes_per_device"] / 50e9,
+    }
+    print(json.dumps(out, indent=1))
+    return out
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    overrides = {}
+    serve_bf16 = False
+    for tok in sys.argv[3:]:
+        k, v = tok.split("=", 1)
+        if k == "serve_bf16":
+            serve_bf16 = v not in ("0", "false")
+            continue
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    run(arch, shape, overrides, serve_bf16)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  table1  — dataset statistics (paper's Table I + our stand-in actuals)
+  fig1    — LPA runtime:     NetworkX-LPA vs seq-LPA vs Arachne-JAX-PLP
+  fig2    — Louvain runtime: NetworkX vs seq vs Arachne-JAX-Louvain
+  fig3    — Louvain modularity parity across implementations
+  fig4    — strong scaling of parallel Louvain over device counts,
+            with the paper's phase breakdown (local-moving vs aggregation)
+  roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
+
+Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
+Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BENCH_DATASETS = ["com-amazon", "com-dblp", "com-youtube", "as-skitter",
+                  "com-livejournal", "com-orkut"]
+
+
+def _save(name: str, obj) -> None:
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+def _time(fn, *a, repeat=3, **kw):
+    best = None
+    out = None
+    for _ in range(repeat):
+        t0 = time.time()
+        out = fn(*a, **kw)
+        dt = time.time() - t0
+        best = dt if best is None else min(best, dt)
+    return best, out
+
+
+# ------------------------------------------------------------------ table I
+
+
+def bench_table1():
+    from repro.graph import datasets
+    rows = []
+    for name in BENCH_DATASETS:
+        lg = datasets.load(name)
+        rows.append({
+            "graph": name,
+            "paper_V": lg.meta.paper_vertices, "paper_E": lg.meta.paper_edges,
+            "paper_diam": lg.meta.paper_diameter,
+            "standin_V": lg.n, "standin_E": lg.m_undirected,
+            "standin_kind": lg.meta.description,
+        })
+    _save("table1_datasets", rows)
+    print(f"{'graph':18s} {'paper |V|':>11s} {'paper |E|':>12s} "
+          f"{'ours |V|':>9s} {'ours |E|':>10s}  kind")
+    for r in rows:
+        print(f"{r['graph']:18s} {r['paper_V']:>11,d} {r['paper_E']:>12,d} "
+              f"{r['standin_V']:>9,d} {r['standin_E']:>10,d}  {r['standin_kind']}")
+    return rows
+
+
+# ------------------------------------------------------------------ fig 1/2/3
+
+
+def _quality(g, labels):
+    from repro.core.baselines import nx_modularity
+    return nx_modularity(g, np.asarray(labels))
+
+
+def bench_fig1_lpa(repeat=2):
+    import jax.numpy as jnp
+    from repro.core.baselines import nx_lpa, seq_lpa
+    from repro.core.plp import PLPConfig, plp
+    from repro.graph import datasets
+    rows = []
+    for name in BENCH_DATASETS:
+        lg = datasets.load(name)
+        g = lg.graph
+        t_nx = t_seq = None
+        if lg.n <= 60_000:
+            t_nx, lab_nx = _time(nx_lpa, g, repeat=1)
+            t_seq, lab_seq = _time(seq_lpa, g, repeat=1)
+        # warm once (jit), then time (single timed run on the big graphs)
+        cfg = PLPConfig(max_iterations=60)
+        plp(g, cfg)
+        rep = repeat if lg.n <= 50_000 else 1
+        t_jax, r = _time(lambda: plp(g, cfg), repeat=rep)
+        rows.append({
+            "graph": name, "V": lg.n, "E": lg.m_undirected,
+            "networkx_s": t_nx, "seq_python_s": t_seq, "arachne_jax_s": t_jax,
+            "speedup_vs_nx": (t_nx / t_jax) if t_nx else None,
+            "iterations": r.iterations,
+        })
+        print(f"[fig1] {name:18s} nx={t_nx and f'{t_nx:6.2f}s' or '   n/a'} "
+              f"seq={t_seq and f'{t_seq:6.2f}s' or '   n/a'} "
+              f"jax={t_jax:6.2f}s "
+              f"speedup={t_nx and f'{t_nx/t_jax:5.1f}x' or '  -'}")
+    _save("fig1_lpa_runtime", rows)
+    return rows
+
+
+def bench_fig2_fig3_louvain(repeat=2):
+    from repro.core.baselines import nx_louvain, seq_louvain, nx_modularity
+    from repro.core.louvain import LouvainConfig, louvain
+    from repro.graph import datasets
+    rows = []
+    for name in BENCH_DATASETS:
+        lg = datasets.load(name)
+        g = lg.graph
+        t_nx = q_nx = t_seq = q_seq = None
+        if lg.n <= 60_000:
+            t_nx, lab_nx = _time(nx_louvain, g, repeat=1)
+            q_nx = _quality(g, lab_nx)
+            t_seq, lab_seq = _time(seq_louvain, g, repeat=1)
+            q_seq = _quality(g, lab_seq)
+        cfg = LouvainConfig(track_modularity=False)
+        if lg.n <= 50_000:
+            louvain(g, cfg)  # warm (compile); big graphs: one cold timed run
+        rep = repeat if lg.n <= 50_000 else 1
+        t_jax, res = _time(lambda: louvain(g, cfg), repeat=rep)
+        q_jax = float(res.modularity)
+        rows.append({
+            "graph": name, "V": lg.n, "E": lg.m_undirected,
+            "networkx_s": t_nx, "seq_python_s": t_seq, "arachne_jax_s": t_jax,
+            "speedup_vs_nx": (t_nx / t_jax) if t_nx else None,
+            "Q_networkx": q_nx, "Q_seq": q_seq, "Q_arachne_jax": q_jax,
+            "levels": res.levels, "n_communities": int(res.n_communities),
+        })
+        print(f"[fig2/3] {name:18s} "
+              f"nx={t_nx and f'{t_nx:6.2f}s' or '   n/a'} "
+              f"jax={t_jax:6.2f}s "
+              f"Q(nx)={q_nx and f'{q_nx:.4f}' or '  -  '} Q(jax)={q_jax:.4f}")
+    _save("fig2_louvain_runtime_fig3_modularity", rows)
+    return rows
+
+
+# ------------------------------------------------------------------ fig 4
+
+
+_SCALING_SNIPPET = r"""
+import os, json, time, sys
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.graph import datasets
+from repro.core.distributed import distributed_louvain
+lg = datasets.load("com-livejournal")
+nd = int(sys.argv[1])
+mesh = Mesh(np.array(jax.devices()[:nd]).reshape(nd), ("data",))
+res = distributed_louvain(lg.graph, mesh)      # warm compile + run
+t0 = time.time()
+res = distributed_louvain(lg.graph, mesh)
+total = time.time() - t0
+print(json.dumps({"devices": nd, "total_s": total,
+                  "phases": dict(res.timer.totals),
+                  "modularity": float(res.modularity)}))
+"""
+
+
+def bench_fig4_strong_scaling(device_counts=(1, 2, 4, 8)):
+    rows = []
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    for nd in device_counts:
+        p = subprocess.run([sys.executable, "-c", _SCALING_SNIPPET, str(nd)],
+                           capture_output=True, text=True, env=env, cwd=REPO,
+                           timeout=1800)
+        if p.returncode != 0:
+            print(f"[fig4] devices={nd} FAILED\n{p.stderr[-800:]}")
+            continue
+        rec = json.loads(p.stdout.strip().splitlines()[-1])
+        rows.append(rec)
+        ph = rec.get("phases", {})
+        print(f"[fig4] devices={nd:3d} total={rec['total_s']:6.2f}s "
+              f"Q={rec['modularity']:.4f} phases={ {k: round(v,2) for k,v in ph.items()} }")
+    if rows:
+        base = rows[0]["total_s"]
+        for r in rows:
+            r["speedup"] = base / r["total_s"]
+    _save("fig4_strong_scaling", rows)
+    return rows
+
+
+# ------------------------------------------------------------------ roofline
+
+
+def bench_roofline():
+    from benchmarks import roofline
+    return roofline.main([])
+
+
+# ------------------------------------------------------------------ driver
+
+
+ALL = {
+    "table1": bench_table1,
+    "fig1": bench_fig1_lpa,
+    "fig2_fig3": bench_fig2_fig3_louvain,
+    "fig4": bench_fig4_strong_scaling,
+    "roofline": bench_roofline,
+}
+
+
+def main(argv=None) -> None:
+    names = (argv or sys.argv[1:]) or list(ALL)
+    for n in names:
+        print(f"\n===== {n} =====")
+        ALL[n]()
+
+
+if __name__ == "__main__":
+    main()

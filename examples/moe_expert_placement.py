@@ -1,0 +1,51 @@
+"""Beyond-paper integration: Louvain community detection for MoE expert
+placement (see src/repro/core/expert_placement.py and DESIGN.md §9).
+
+Builds a skewed synthetic router trace (experts co-fire in latent clusters,
+as observed in practice), then compares cross-device dispatch traffic under
+random vs Louvain-derived placement.
+
+    PYTHONPATH=src python examples/moe_expert_placement.py
+"""
+import numpy as np
+
+from repro.core.expert_placement import (
+    coactivation_graph, louvain_placement, placement_traffic, random_placement)
+
+
+def synth_routing(n_tokens=20000, n_experts=128, top_k=8, n_latent=16, seed=0):
+    """Tokens pick a latent topic; experts cluster around topics (realistic
+    co-activation skew for a trained router)."""
+    rng = np.random.default_rng(seed)
+    topic_of_expert = rng.integers(0, n_latent, n_experts)
+    experts_by_topic = [np.where(topic_of_expert == t)[0] for t in range(n_latent)]
+    out = np.zeros((n_tokens, top_k), np.int32)
+    for i in range(n_tokens):
+        t = rng.integers(0, n_latent)
+        pool = experts_by_topic[t]
+        if rng.random() < 0.2 or pool.size < top_k:  # 20% off-topic leakage
+            out[i] = rng.choice(n_experts, top_k, replace=False)
+        else:
+            out[i] = rng.choice(pool, top_k, replace=pool.size < top_k)
+    return out
+
+
+def main():
+    n_experts, n_groups, top_k = 128, 16, 8   # qwen3-moe on a 16-way EP axis
+    routing = synth_routing(n_experts=n_experts, top_k=top_k)
+    g = coactivation_graph(routing, n_experts)
+    pl_rand = random_placement(n_experts, n_groups)
+    pl_louv = louvain_placement(g, n_experts, n_groups)
+    t_rand = placement_traffic(routing, pl_rand, n_groups)
+    t_louv = placement_traffic(routing, pl_louv, n_groups)
+    print(f"experts={n_experts} groups={n_groups} top_k={top_k}")
+    print(f"cross-group dispatch fraction:")
+    print(f"  random placement : {t_rand:.3f}")
+    print(f"  louvain placement: {t_louv:.3f}")
+    print(f"  reduction        : {100*(1 - t_louv/t_rand):.1f}% of correlated "
+          f"all-to-all traffic avoided")
+    assert t_louv < t_rand, "Louvain placement should beat random"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""End-to-end reproduction of the paper's experimental pipeline (laptop scale).
+
+Runs both algorithms on the six SNAP stand-ins (Table I), against the
+NetworkX baselines the paper compares with, and prints runtime + modularity
+tables mirroring Figs. 1-3.
+
+    PYTHONPATH=src python examples/paper_pipeline.py [--scale 0.03125]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None,
+                    help="fraction of the paper's |V| (default 1/32)")
+    args = ap.parse_args()
+    if args.scale:
+        os.environ["REPRO_DATASET_SCALE"] = str(args.scale)
+
+    from benchmarks.run import bench_table1, bench_fig1_lpa, bench_fig2_fig3_louvain
+    print("===== Table I (datasets) =====")
+    bench_table1()
+    print("\n===== Fig. 1 (LPA runtime) =====")
+    bench_fig1_lpa()
+    print("\n===== Fig. 2/3 (Louvain runtime + modularity) =====")
+    bench_fig2_fig3_louvain()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: community detection with the repro framework (30 seconds).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.louvain import louvain
+from repro.core.plp import PLPConfig, plp
+from repro.core.modularity import modularity
+from repro.graph.builders import from_numpy_edges
+from repro.graph.generators import nmi, sbm
+
+
+def main():
+    # a planted-partition graph: 1000 vertices, 20 communities
+    u, v, w, truth = sbm(1000, 20, p_in=0.3, p_out=0.005, seed=0)
+    g = from_numpy_edges(u, v, w)
+    print(f"graph: {int(g.n_valid)} vertices, {int(g.m_valid)//2} undirected edges")
+
+    # --- parallel label propagation (paper Alg. 1) ---
+    r = plp(g, PLPConfig(max_iterations=50))
+    print(f"PLP      : {r.iterations} iterations, "
+          f"{len(set(np.asarray(r.labels)[:1000].tolist()))} communities, "
+          f"NMI vs truth = {nmi(np.asarray(r.labels)[:1000], truth):.3f}")
+
+    # --- parallel Louvain (paper Alg. 2/3) ---
+    res = louvain(g)
+    print(f"Louvain  : {res.levels} levels, {int(res.n_communities)} communities, "
+          f"Q = {res.modularity:.4f}, "
+          f"NMI vs truth = {nmi(np.asarray(res.labels)[:1000], truth):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Batched serving example: slot-based continuous batching over a small LM.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+from repro import configs
+from repro.launch.serve import Request, ServeEngine
+from repro.models import api as model_api
+from repro.models.common import init_params
+
+
+def main():
+    c = configs.get("qwen3-1.7b", reduced=True)
+    model = model_api.build(c)
+    params = init_params(model.decls, seed=0)
+    engine = ServeEngine(c, params, batch_slots=4, max_seq=128)
+
+    requests = [Request(prompt=[10 + i, 20 + i, 30 + i], max_new=12)
+                for i in range(10)]
+    t0 = time.time()
+    done = engine.run(requests)
+    dt = time.time() - t0
+    total_new = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {total_new} tokens "
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, batch_slots=4)")
+    for i, r in enumerate(done[:3]):
+        print(f"  req{i}: prompt={list(r.prompt)} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Dataclass-based config system with CLI overrides and serialization."""
+from repro.config.base import (
+    ConfigBase,
+    apply_overrides,
+    config_from_dict,
+    config_to_dict,
+    parse_cli_overrides,
+)
+
+__all__ = [
+    "ConfigBase",
+    "apply_overrides",
+    "config_from_dict",
+    "config_to_dict",
+    "parse_cli_overrides",
+]

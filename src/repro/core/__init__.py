@@ -1,0 +1,26 @@
+"""The paper's primary contribution: parallel community detection.
+
+* ``plp``      — Parallel Label Propagation (paper Alg. 1)
+* ``louvain``  — Parallel Louvain: local-moving (Alg. 2) + aggregation (Alg. 3)
+* ``modularity`` — §II-C metric + Eq. 1 move gain
+* ``baselines`` — sequential/NetworkX comparison tier (paper §V)
+* ``distributed`` — shard_map multi-device variants (DESIGN.md §6)
+"""
+from repro.core.plp import PLPConfig, PLPResult, plp
+from repro.core.louvain import LouvainConfig, LouvainResult, louvain
+from repro.core.modularity import modularity, community_volumes, delta_q_from_score
+from repro.core import aggregation, baselines
+
+__all__ = [
+    "PLPConfig",
+    "PLPResult",
+    "plp",
+    "LouvainConfig",
+    "LouvainResult",
+    "louvain",
+    "modularity",
+    "community_volumes",
+    "delta_q_from_score",
+    "aggregation",
+    "baselines",
+]

@@ -1,0 +1,55 @@
+"""Shared pieces of the two community-detection algorithms."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph
+
+
+def hash_u32(x: jax.Array) -> jax.Array:
+    """splitmix32-style avalanche hash on uint32 (wraps mod 2^32)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def tie_noise(a: jax.Array, b: jax.Array, seed: jax.Array, eps: float) -> jax.Array:
+    """Deterministic pseudo-random tie-break noise in [0, eps).
+
+    Stands in for the paper's "inherent randomization provided by thread
+    execution" (§III-A2): the asynchronous Chapel version breaks label-score
+    ties through racy scheduling; the synchronous TPU version breaks them with
+    a seeded hash of (vertex, candidate, iteration) — reproducible, and
+    statistically equivalent for community quality.
+    """
+    h = hash_u32(
+        a.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+        ^ hash_u32(b.astype(jnp.uint32) + seed.astype(jnp.uint32))
+    )
+    return h.astype(jnp.float32) * jnp.float32(eps / 4294967296.0)
+
+
+def neighbor_or_self_changed(g: Graph, changed: jax.Array) -> jax.Array:
+    """Active-set propagation (Alg. 1 l.25 / Alg. 2 l.21): a vertex needs
+    re-checking iff it changed or any neighbor changed."""
+    contrib = jnp.where(g.edge_mask, changed[g.src].astype(jnp.int32), 0)
+    nbr = jax.ops.segment_max(contrib, g.dst, num_segments=g.n_max) > 0
+    return changed | nbr
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["labels", "iterations", "delta_n", "active_count"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class SweepHistory:
+    labels: jax.Array
+    iterations: jax.Array
+    delta_n: jax.Array
+    active_count: jax.Array

@@ -1,0 +1,110 @@
+"""Move-evaluation primitives shared by single-device and shard_map sweeps.
+
+Both PLP (Alg. 1 l.18) and Louvain local-moving (Alg. 2 l.13-16) reduce to:
+  "for every destination vertex, group incident edges by a per-edge candidate
+   key, sum weights per group, then argmax a per-group score"
+— the sort+segment GroupBy pattern.  The distributed sweeps call these on
+*local* edge shards (each vertex's in-edges live on its owner device), so the
+same code serves 1 device or a 512-chip mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import tie_noise
+from repro.graph import segment as seg
+
+
+def plp_best_labels(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    valid: jax.Array,
+    labels: jax.Array,
+    n: int,
+    it: jax.Array,
+    seed: jax.Array,
+    tie_eps: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(best_score[n], best_label[n], cur_score[n]) for the PLP move.
+
+    ``labels`` is the full (replicated) label array; edge arrays may be any
+    static length (a local shard).  Vertices with no valid incident edge get
+    best_score = -inf, best_label = -1.
+    """
+    sentinel = jnp.int32(n)
+    cand_valid = valid & (src != dst)
+    dst_k = jnp.where(cand_valid, dst, sentinel)
+    lab_k = jnp.where(cand_valid, labels[jnp.clip(src, 0, n - 1)], sentinel)
+    w_v = jnp.where(cand_valid, w, 0.0)
+
+    (gk, gs, gvalid, _) = seg.groupby_sum((dst_k, lab_k), w_v)
+    gdst, glab = gk
+    grp_ok = gvalid & (gdst < sentinel) & (glab < sentinel)
+
+    noise = tie_noise(gdst, glab, seed + it, tie_eps)
+    score = jnp.where(grp_ok, gs + noise, -jnp.inf)
+    seg_ids = jnp.where(grp_ok, gdst, n)
+    best_score, best_lab = seg.segment_argmax(
+        score, glab, seg_ids, num_segments=n + 1, valid=grp_ok
+    )
+    cur_match = grp_ok & (glab == labels[jnp.clip(gdst, 0, n - 1)])
+    cur_score = jax.ops.segment_sum(
+        jnp.where(cur_match, score, 0.0), seg_ids, num_segments=n + 1
+    )
+    return best_score[:n], best_lab[:n], cur_score[:n]
+
+
+def louvain_best_moves(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    valid: jax.Array,
+    com: jax.Array,
+    deg: jax.Array,
+    vol_com: jax.Array,
+    size_com: jax.Array,
+    vol_v: jax.Array,
+    n: int,
+    singleton_rule: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best_gain[n], best_community[n]) for the Louvain local move (Eq. 1).
+
+    gain is Eq. 1 rescaled by 1/vol(V):  ΔQ = 2·gain/vol(V).
+    ``com``/``deg``/``vol_com``/``size_com`` are full replicated arrays.
+    """
+    sentinel = jnp.int32(n)
+    cand_valid = valid & (src != dst)
+    dst_k = jnp.where(cand_valid, dst, sentinel)
+    cand_k = jnp.where(cand_valid, com[jnp.clip(src, 0, n - 1)], sentinel)
+    w_v = jnp.where(cand_valid, w, 0.0)
+
+    (gk, gs, gvalid, _) = seg.groupby_sum((dst_k, cand_k), w_v)
+    gdst, gcand = gk
+    grp_ok = gvalid & (gdst < sentinel) & (gcand < sentinel)
+
+    gdst_c = jnp.clip(gdst, 0, n - 1)
+    seg_ids = jnp.where(grp_ok, gdst, n)
+    A = com[gdst_c]
+    deg_d = deg[gdst_c]
+    s_to_A = jax.ops.segment_sum(
+        jnp.where(grp_ok & (gcand == A), gs, 0.0), seg_ids, num_segments=n + 1
+    )[:n]
+
+    cand_c = jnp.clip(gcand, 0, n - 1)
+    vol_B_minus = vol_com[cand_c] - jnp.where(gcand == A, deg_d, 0.0)
+    vol_A_minus = vol_com[jnp.clip(A, 0, n - 1)] - deg_d
+    gain = (gs - s_to_A[gdst_c]) - deg_d * (vol_B_minus - vol_A_minus) / vol_v
+
+    if singleton_rule:
+        both_single = (size_com[jnp.clip(A, 0, n - 1)] == 1) & (size_com[cand_c] == 1)
+        gain = jnp.where(both_single & (gcand > A), -jnp.inf, gain)
+
+    gain = jnp.where(grp_ok & (gcand != A), gain, -jnp.inf)
+    best_gain, best_cand = seg.segment_argmax(
+        gain, gcand, seg_ids, num_segments=n + 1, valid=grp_ok
+    )
+    return best_gain[:n], best_cand[:n]

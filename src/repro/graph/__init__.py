@@ -1,0 +1,34 @@
+"""Graph substrate: structures, segment (GroupBy) primitives, generators, datasets."""
+from repro.graph.structure import Graph, graph_from_arrays
+from repro.graph.segment import (
+    sort_by_keys,
+    run_starts,
+    run_ids,
+    groupby_sum,
+    compact,
+    segment_argmax,
+)
+from repro.graph.builders import (
+    from_undirected_edges,
+    from_numpy_edges,
+    validate_graph,
+)
+from repro.graph import generators, datasets, partition, ell
+
+__all__ = [
+    "Graph",
+    "graph_from_arrays",
+    "from_undirected_edges",
+    "from_numpy_edges",
+    "validate_graph",
+    "sort_by_keys",
+    "run_starts",
+    "run_ids",
+    "groupby_sum",
+    "compact",
+    "segment_argmax",
+    "generators",
+    "datasets",
+    "partition",
+    "ell",
+]

@@ -1,0 +1,123 @@
+"""Graph construction: symmetrize + dedup undirected edge lists.
+
+This is the ingest path equivalent to Arachne's "tabular data -> graph"
+conversion (§II-D).  The host-side path (numpy) is used for dataset loading;
+the jit path (`repro.graph.segment`) is used when graphs are built inside a
+compiled program (Louvain aggregation).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph, graph_from_arrays
+
+
+def from_numpy_edges(
+    u: np.ndarray,
+    v: np.ndarray,
+    w: Optional[np.ndarray] = None,
+    *,
+    n: Optional[int] = None,
+    m_max: Optional[int] = None,
+    dedup: bool = True,
+    sort_by: str = "src",
+) -> Graph:
+    """Build a Graph from an undirected host edge list.
+
+    * symmetrizes: {u,v} -> (u,v) and (v,u)
+    * input self-loops (u==v) are stored once with DOUBLED weight (paper §II-A:
+      "loops are counted twice")
+    * optional dedup merges parallel edges by weight summation
+    """
+    u = np.asarray(u, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    if w is None:
+        w = np.ones(u.shape[0], dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    if u.shape != v.shape or u.shape != w.shape:
+        raise ValueError("u, v, w must have identical shapes")
+    n = int(n if n is not None else (max(u.max(initial=-1), v.max(initial=-1)) + 1))
+    if u.size and (u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n):
+        raise ValueError("vertex ids out of range")
+
+    loops = u == v
+    nl_u, nl_v, nl_w = u[~loops], v[~loops], w[~loops]
+    lp_u, lp_w = u[loops], w[loops]
+
+    src = np.concatenate([nl_u, nl_v, lp_u])
+    dst = np.concatenate([nl_v, nl_u, lp_u])
+    ww = np.concatenate([nl_w, nl_w, 2.0 * lp_w])
+
+    if dedup and src.size:
+        key = src * n + dst
+        order = np.argsort(key, kind="stable")
+        key, src, dst, ww = key[order], src[order], dst[order], ww[order]
+        starts = np.concatenate([[True], key[1:] != key[:-1]])
+        rid = np.cumsum(starts) - 1
+        sums = np.zeros(rid[-1] + 1, dtype=np.float64)
+        np.add.at(sums, rid, ww)
+        src, dst, ww = src[starts], dst[starts], sums
+
+    if sort_by == "dst":
+        order = np.lexsort((src, dst))
+    else:
+        order = np.lexsort((dst, src))
+    src, dst, ww = src[order], dst[order], ww[order]
+
+    return graph_from_arrays(
+        jnp.asarray(src, dtype=jnp.int32),
+        jnp.asarray(dst, dtype=jnp.int32),
+        jnp.asarray(ww, dtype=jnp.float32),
+        n_max=n,
+        m_max=m_max,
+        n_valid=n,
+        sorted_by=sort_by,
+    )
+
+
+def from_undirected_edges(edges, n: Optional[int] = None, **kw) -> Graph:
+    """Convenience: iterable of (u, v) or (u, v, w) tuples."""
+    arr = np.asarray(list(edges), dtype=np.float64)
+    if arr.size == 0:
+        arr = np.zeros((0, 2))
+    u, v = arr[:, 0].astype(np.int64), arr[:, 1].astype(np.int64)
+    w = arr[:, 2] if arr.shape[1] > 2 else None
+    return from_numpy_edges(u, v, w, n=n, **kw)
+
+
+def validate_graph(g: Graph) -> None:
+    """Host-side invariant checks (tests / debugging):
+
+    * symmetry: (u,v,w) valid  <=>  (v,u,w) valid (loops once)
+    * masks consistent with n_valid/m_valid
+    * sort invariant holds
+    """
+    src, dst, w = g.to_numpy_edges()
+    if int(np.sum(np.asarray(g.edge_mask))) != int(g.m_valid):
+        raise AssertionError("edge_mask count != m_valid")
+    if src.size:
+        if src.max() >= int(g.n_valid) or dst.max() >= int(g.n_valid):
+            raise AssertionError("valid edge endpoints out of vertex range")
+    if g.sorted_by == "src":
+        key = src.astype(np.int64) * g.n_max + dst
+        if np.any(np.diff(key) < 0):
+            raise AssertionError("not sorted by (src, dst)")
+    elif g.sorted_by == "dst":
+        key = dst.astype(np.int64) * g.n_max + src
+        if np.any(np.diff(key) < 0):
+            raise AssertionError("not sorted by (dst, src)")
+    nonloop = src != dst
+    fwd = set(zip(src[nonloop].tolist(), dst[nonloop].tolist()))
+    for (a, b) in fwd:
+        if (b, a) not in fwd:
+            raise AssertionError(f"missing reverse edge for ({a},{b})")
+    # reverse weights must match
+    wmap = {}
+    for a, b, x in zip(src.tolist(), dst.tolist(), w.tolist()):
+        wmap[(a, b)] = wmap.get((a, b), 0.0) + x
+    for (a, b), x in wmap.items():
+        if a != b and abs(wmap[(b, a)] - x) > 1e-5 * max(1.0, abs(x)):
+            raise AssertionError(f"asymmetric weight on ({a},{b})")

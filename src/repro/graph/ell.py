@@ -1,0 +1,125 @@
+"""Degree-bucketed ELL (padded neighbor-list) layout for the Pallas kernel path.
+
+TPU adaptation of the per-vertex neighborhood loops (DESIGN.md §2): vertices
+are grouped by degree into buckets of fixed width W ∈ BUCKET_WIDTHS; within a
+bucket, neighbor ids/weights are dense (rows, W) tiles — ideal for VMEM
+BlockSpecs.  Vertices with deg > max(W) fall back to the sort+segment path
+(the "tail"), mirroring how high-degree hubs get special-cased in parallel
+community detection codes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.structure import Graph
+
+BUCKET_WIDTHS = (16, 64, 256, 1024)
+ROW_PAD = 8  # sublane alignment for (rows, W) tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class EllBucket:
+    width: int
+    rows: np.ndarray      # int32[R] vertex id per row (sentinel n_max for padding rows)
+    nbr: np.ndarray       # int32[R, W] neighbor vertex ids (sentinel n_max pad)
+    w: np.ndarray         # float32[R, W] edge weights (0 pad)
+    n_rows_valid: int
+
+
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
+    n_max: int
+    buckets: Tuple[EllBucket, ...]
+    tail_vertices: np.ndarray     # int32[T] vertices handled by the sort path
+    tail_edge_idx: np.ndarray     # int64[K] indices into the dst-sorted edge list
+    loop_w: np.ndarray            # float32[n_max] doubled self-loop weight per vertex
+    deg_w: np.ndarray             # float32[n_max]
+
+    @property
+    def has_tail(self) -> bool:
+        return self.tail_vertices.size > 0
+
+
+def build_ell(
+    g: Graph,
+    widths: Tuple[int, ...] = BUCKET_WIDTHS,
+    include_loops: bool = False,
+) -> EllGraph:
+    """Host-side ELL build.  Rows are IN-neighborhoods (edges grouped by dst);
+    by symmetry these equal out-neighborhoods.  Self-loops are excluded from
+    neighbor tiles by default (they are never move candidates) and reported
+    separately via ``loop_w``.
+    """
+    src, dst, w = g.to_numpy_edges()
+    n = g.n_max
+
+    loop_w = np.zeros(n, dtype=np.float32)
+    np.add.at(loop_w, src[src == dst], w[src == dst])
+    deg_w = np.zeros(n, dtype=np.float32)
+    np.add.at(deg_w, src, w)
+
+    # Sort the FULL list by (dst, src) first: tail_edge_idx must index the
+    # same dst-sorted view that runtime code (plp._tail_move) reconstructs.
+    order = np.lexsort((src, dst))
+    src, dst, w = src[order], dst[order], w[order]
+    deg_full = np.zeros(n, dtype=np.int64)
+    np.add.at(deg_full, dst, 1)
+    row_ptr_full = np.concatenate([[0], np.cumsum(deg_full)])
+
+    if not include_loops:
+        keep = src != dst
+        src_b, dst_b, w_b = src[keep], dst[keep], w[keep]
+    else:
+        src_b, dst_b, w_b = src, dst, w
+    deg = np.zeros(n, dtype=np.int64)
+    np.add.at(deg, dst_b, 1)
+    row_ptr = np.concatenate([[0], np.cumsum(deg)])
+    src, dst, w = src_b, dst_b, w_b
+
+    max_w = widths[-1]
+    buckets: List[EllBucket] = []
+    prev = 0
+    for W in widths:
+        vids = np.where((deg > prev) & (deg <= W))[0]
+        prev = W
+        R = int(np.ceil(max(1, len(vids)) / ROW_PAD) * ROW_PAD)
+        rows = np.full(R, n, dtype=np.int32)
+        nbr = np.full((R, W), n, dtype=np.int32)
+        ww = np.zeros((R, W), dtype=np.float32)
+        for r, v in enumerate(vids):
+            lo, hi = row_ptr[v], row_ptr[v + 1]
+            rows[r] = v
+            nbr[r, : hi - lo] = src[lo:hi]
+            ww[r, : hi - lo] = w[lo:hi]
+        buckets.append(EllBucket(W, rows, nbr, ww, len(vids)))
+
+    tail_vertices = np.where(deg > max_w)[0].astype(np.int32)
+    tail_edges = []
+    for v in tail_vertices:  # index into the FULL dst-sorted list (loops incl.)
+        tail_edges.append(np.arange(row_ptr_full[v], row_ptr_full[v + 1], dtype=np.int64))
+    tail_edge_idx = (
+        np.concatenate(tail_edges) if tail_edges else np.zeros(0, dtype=np.int64)
+    )
+    return EllGraph(
+        n_max=n,
+        buckets=tuple(buckets),
+        tail_vertices=tail_vertices,
+        tail_edge_idx=tail_edge_idx,
+        loop_w=loop_w,
+        deg_w=deg_w.astype(np.float32),
+    )
+
+
+def ell_stats(e: EllGraph) -> dict:
+    out = {"n": e.n_max, "tail_vertices": int(e.tail_vertices.size)}
+    total_slots = 0
+    used_slots = 0
+    for b in e.buckets:
+        total_slots += b.nbr.size
+        used_slots += int((b.nbr < e.n_max).sum())
+        out[f"bucket_w{b.width}_rows"] = b.n_rows_valid
+    out["slot_utilization"] = used_slots / max(1, total_slots)
+    return out

@@ -1,0 +1,101 @@
+"""Segment / GroupBy primitives — the XLA re-expression of Arkouda's GroupBy.
+
+The paper's aggregation phase leans on Arkouda ``GroupBy`` + ``Broadcast``
+(§III-B2).  On TPU the same computation is a multi-operand ``lax.sort``
+followed by run detection (`run_starts`), run-id `cumsum`, and
+``segment_sum`` — every helper here is jit-safe with static shapes.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_by_keys(
+    keys: Sequence[jax.Array], values: Sequence[jax.Array] = ()
+) -> Tuple[Tuple[jax.Array, ...], Tuple[jax.Array, ...]]:
+    """Stable lexicographic sort of ``values`` by ``keys`` (all same length)."""
+    operands = tuple(keys) + tuple(values)
+    out = jax.lax.sort(operands, num_keys=len(keys), is_stable=True)
+    return out[: len(keys)], out[len(keys):]
+
+
+def run_starts(*sorted_keys: jax.Array) -> jax.Array:
+    """bool[m]: True at the first element of each equal-key run."""
+    m = sorted_keys[0].shape[0]
+    neq = jnp.zeros((m - 1,), dtype=bool)
+    for k in sorted_keys:
+        neq = neq | (k[1:] != k[:-1])
+    return jnp.concatenate([jnp.ones((1,), dtype=bool), neq])
+
+
+def run_ids(starts: jax.Array) -> jax.Array:
+    """int32[m]: dense run index (0-based) for each element."""
+    return jnp.cumsum(starts.astype(jnp.int32)) - 1
+
+
+def groupby_sum(
+    keys: Sequence[jax.Array], values: jax.Array, valid: jax.Array | None = None
+) -> Tuple[Tuple[jax.Array, ...], jax.Array, jax.Array, jax.Array]:
+    """GroupBy(keys).sum(values) with static output capacity.
+
+    Invalid entries must already sort to the end (give them sentinel keys).
+
+    Returns (group_keys, group_sums, group_valid, n_groups):
+      group_keys: one representative key tuple per run, COMPACTED to the front
+      group_sums: float sums per run, compacted to the front
+      group_valid: bool[m] — first n_groups entries True
+      n_groups: int32 scalar (number of valid groups)
+    """
+    m = values.shape[0]
+    if valid is None:
+        valid = jnp.ones((m,), dtype=bool)
+    flag = jnp.where(valid, 0, 1).astype(jnp.int32)
+    (sk, sv) = sort_by_keys((flag,) + tuple(keys), (values,))
+    sflag, *skeys = sk
+    svalid = sflag == 0
+    starts_all = run_starts(sflag, *skeys)
+    starts = starts_all & svalid
+    rid = run_ids(starts_all)
+    sums = jax.ops.segment_sum(jnp.where(svalid, sv[0], 0.0), rid, num_segments=m)
+    # compact run representatives to the front
+    order = jnp.argsort(jnp.where(starts, 0, 1), stable=True)
+    group_keys = tuple(k[order] for k in skeys)
+    group_rids = rid[order]
+    group_sums = sums[group_rids]
+    n_groups = jnp.sum(starts.astype(jnp.int32))
+    group_valid = jnp.arange(m, dtype=jnp.int32) < n_groups
+    return group_keys, group_sums, group_valid, n_groups
+
+
+def compact(mask: jax.Array, arrays: Sequence[jax.Array]) -> Tuple[Tuple[jax.Array, ...], jax.Array]:
+    """Stable-move entries where mask is True to the front. Returns (arrays, count)."""
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True)
+    return tuple(a[order] for a in arrays), jnp.sum(mask.astype(jnp.int32))
+
+
+def segment_argmax(
+    scores: jax.Array,
+    candidates: jax.Array,
+    segments: jax.Array,
+    num_segments: int,
+    valid: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-segment (max score, candidate achieving it; smallest-candidate tie-break).
+
+    scores: f32[m]; candidates: i32[m]; segments: i32[m] in [0, num_segments).
+    Returns (best_score[num_segments], best_candidate[num_segments]);
+    empty segments get (-inf, -1).
+    """
+    neg_inf = jnp.float32(-jnp.inf)
+    if valid is not None:
+        scores = jnp.where(valid, scores, neg_inf)
+    best = jax.ops.segment_max(scores, segments, num_segments=num_segments)
+    is_best = scores == best[segments]
+    big = jnp.int32(2**31 - 1)
+    cand_masked = jnp.where(is_best & (scores > neg_inf), candidates, big)
+    best_cand = jax.ops.segment_min(cand_masked, segments, num_segments=num_segments)
+    best_cand = jnp.where(best_cand == big, -1, best_cand)
+    return best, best_cand

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §2).
+
+Three kernels, each the TPU-native re-derivation of a phase the paper
+parallelizes on CPU threads:
+
+* ``label_argmax`` — PLP move (Alg. 1 l.18): per-vertex weighted label mode
+  over degree-bucketed ELL tiles, via a W×W pairwise-equality reduction in
+  VMEM (replaces the per-thread hash map).
+* ``delta_q`` — Louvain local-moving (Alg. 2 l.13-16): fused Eq. 1 gain +
+  argmax over neighboring communities on the same tiles.
+* ``segment_sum`` — aggregation GroupBy reduce (Alg. 3): block-segmented sums
+  over sorted keys with an O(num_blocks) spine fix-up (replaces scatter-add).
+
+Layout: <name>/kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+pallas/oracle dispatch), ref.py (pure-jnp oracle).
+"""
+from repro.kernels import label_argmax, delta_q, segment_sum
+
+__all__ = ["label_argmax", "delta_q", "segment_sum"]

@@ -1,0 +1,41 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: True unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_row_block(width: int, budget_elems: int = 1 << 21) -> int:
+    """Rows per block so the (R_blk, W, W) pairwise tensor stays within a
+    ~8 MB f32 VMEM budget; sublane-aligned."""
+    r = max(1, budget_elems // max(1, width * width))
+    r = min(r, 512)
+    if r >= 8:
+        r = (r // 8) * 8
+    return r
+
+
+def hash_u32_jnp(x: jax.Array) -> jax.Array:
+    """splitmix32 avalanche — identical to core.common.hash_u32 (kept local so
+    kernels do not import the algorithm layer)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def tie_noise_jnp(a: jax.Array, b: jax.Array, seed: jax.Array, eps: float) -> jax.Array:
+    h = hash_u32_jnp(
+        a.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+        ^ hash_u32_jnp(b.astype(jnp.uint32) + seed.astype(jnp.uint32))
+    )
+    return h.astype(jnp.float32) * jnp.float32(eps / 4294967296.0)

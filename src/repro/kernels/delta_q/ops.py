@@ -1,0 +1,56 @@
+"""Jit'd public wrapper for the delta_q kernel (pallas/oracle dispatch)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.delta_q.kernel import delta_q_pallas
+from repro.kernels.delta_q.ref import delta_q_ref
+
+
+@partial(
+    jax.jit,
+    static_argnames=("sentinel", "singleton_rule", "use_pallas", "interpret"),
+)
+def delta_q_argmax(
+    cand_com: jax.Array,
+    nbr_w: jax.Array,
+    cur_com: jax.Array,
+    deg_v: jax.Array,
+    vol_cand: jax.Array,
+    vol_cur: jax.Array,
+    size_cand: jax.Array,
+    size_cur: jax.Array,
+    vol_total: jax.Array,
+    *,
+    sentinel: int,
+    singleton_rule: bool = True,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best_community, best_gain) per row; gain is Eq. 1 / vol(V)."""
+    cand_com = cand_com.astype(jnp.int32)
+    nbr_w = nbr_w.astype(jnp.float32)
+    cur_com = cur_com.astype(jnp.int32)
+    deg_v = deg_v.astype(jnp.float32)
+    vol_cand = vol_cand.astype(jnp.float32)
+    vol_cur = vol_cur.astype(jnp.float32)
+    size_cand = size_cand.astype(jnp.int32)
+    size_cur = size_cur.astype(jnp.int32)
+    inv_vol = (1.0 / vol_total).astype(jnp.float32)
+    if use_pallas:
+        interp = default_interpret() if interpret is None else interpret
+        return delta_q_pallas(
+            cand_com, nbr_w, cur_com, deg_v, vol_cand, vol_cur,
+            size_cand, size_cur, inv_vol,
+            sentinel=sentinel, singleton_rule=singleton_rule, interpret=interp,
+        )
+    return delta_q_ref(
+        cand_com, nbr_w, cur_com, deg_v, vol_cand, vol_cur,
+        size_cand, size_cur, inv_vol,
+        sentinel=sentinel, singleton_rule=singleton_rule,
+    )

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the Louvain Δ𝑄 local-moving kernel (Eq. 1).
+
+Per row r (one vertex v, ELL tile of width W; candidate j is the community of
+neighbor j):
+
+  S(c)        = Σ_k w[r,k] · [cand[r,k] == c]          (= cut_w(v, c))
+  S_A         = S(cur_com[r])                          (= cut_w(v, A⁻))
+  vol(B⁻)     = vol_cand[r,j] − [cand==A]·deg_v[r]
+  vol(A⁻)     = vol_cur[r] − deg_v[r]
+  gain(j)     = (S(cand_j) − S_A) − deg_v·(vol(B⁻) − vol(A⁻))/vol_total
+  Δ𝑄          = 2·gain/vol_total   (move iff gain > 0)
+
+Lu–Halappanavar rule: candidate suppressed when both communities are
+singletons and cand > cur.  Argmax tie-break: smallest candidate id —
+identical semantics to ``core.moves.louvain_best_moves``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_q_ref(
+    cand_com: jax.Array,   # (R, W) int32 (sentinel where padded)
+    nbr_w: jax.Array,      # (R, W) float32
+    cur_com: jax.Array,    # (R,) int32
+    deg_v: jax.Array,      # (R,) float32
+    vol_cand: jax.Array,   # (R, W) float32  volCom[cand]
+    vol_cur: jax.Array,    # (R,) float32    volCom[cur]
+    size_cand: jax.Array,  # (R, W) int32    |cand community|
+    size_cur: jax.Array,   # (R,) int32
+    inv_vol_total: jax.Array,  # f32 scalar (1 / vol(V))
+    sentinel: int,
+    singleton_rule: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    valid = cand_com != sentinel
+    eq = cand_com[:, :, None] == cand_com[:, None, :]
+    S = jnp.sum(jnp.where(eq, nbr_w[:, :, None], 0.0), axis=1)        # (R, W)
+    eqA = valid & (cand_com == cur_com[:, None])
+    S_A = jnp.sum(jnp.where(eqA, nbr_w, 0.0), axis=1)                  # (R,)
+
+    is_A = cand_com == cur_com[:, None]
+    vol_B_minus = vol_cand - jnp.where(is_A, deg_v[:, None], 0.0)
+    vol_A_minus = (vol_cur - deg_v)[:, None]
+    gain = (S - S_A[:, None]) - deg_v[:, None] * (
+        (vol_B_minus - vol_A_minus) * inv_vol_total
+    )
+
+    if singleton_rule:
+        both_single = (size_cur[:, None] == 1) & (size_cand == 1)
+        gain = jnp.where(both_single & (cand_com > cur_com[:, None]), -jnp.inf, gain)
+
+    eff = jnp.where(valid & ~is_A, gain, -jnp.inf)
+    best_gain = jnp.max(eff, axis=1)
+    is_best = (eff == best_gain[:, None]) & valid
+    best_cand = jnp.min(jnp.where(is_best, cand_com, sentinel), axis=1)
+    best_cand = jnp.where(best_gain > -jnp.inf, best_cand, -1)
+    return best_cand, best_gain

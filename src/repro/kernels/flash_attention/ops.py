@@ -1,0 +1,37 @@
+"""Jit wrapper for the flash-attention kernel.
+
+``use_pallas=True`` routes through the Pallas kernel (interpret mode on CPU,
+compiled on TPU); ``False`` through the jnp oracle.  Shapes must satisfy the
+kernel's tiling constraints (Sq % block_q == 0, Sk % block_k == 0); the
+wrapper falls back to the oracle otherwise.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, use_pallas: bool = False,
+                    interpret: bool | None = None):
+    if not use_pallas:
+        return _ref.attention_ref(q, k, v, causal=causal)
+    sq, sk = q.shape[2], k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    if sq % bq or sk % bk:
+        return _ref.attention_ref(q, k, v, causal=causal)
+    itp = default_interpret() if interpret is None else interpret
+    return _k.flash_attention_fwd(q, k, v, causal=causal, block_q=bq,
+                                  block_k=bk, interpret=itp)

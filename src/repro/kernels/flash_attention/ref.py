@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal GQA attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0.
+    f32 softmax, bf16-friendly output — the semantic spec for the kernel."""
+    b, hq, sq, d = q.shape
+    hk, sk = k.shape[1], k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

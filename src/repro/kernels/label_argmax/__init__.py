@@ -1,0 +1,3 @@
+from repro.kernels.label_argmax import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

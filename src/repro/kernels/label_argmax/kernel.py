@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: per-vertex weighted label mode (PLP move, Alg. 1 l.18).
+
+TPU adaptation of the paper's per-thread neighborhood hash map: for a degree
+bucket of width W, a (R_blk, W, W) pairwise label-equality tensor turns the
+mode computation into dense VPU reductions held entirely in VMEM — no hash
+map, no sort, no HBM round trips.  Noise-based tie-breaking reproduces the
+paper's thread-race randomization deterministically.
+
+Tiling: grid over row blocks; ``pick_row_block`` sizes R_blk so the pairwise
+tensor stays within a ~8 MB f32 VMEM budget (e.g. W=16 → R_blk=512,
+W=1024 → R_blk=1).  Lane dim = W (multiples of 128 for the wide buckets).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, pick_row_block, tie_noise_jnp
+
+
+def _label_argmax_kernel(
+    lab_ref,      # (R_blk, W) int32
+    w_ref,        # (R_blk, W) float32
+    cur_ref,      # (R_blk, 1) int32
+    rows_ref,     # (R_blk, 1) int32
+    seed_ref,     # (1, 1) int32
+    out_lab_ref,  # (R_blk, 1) int32
+    out_best_ref, # (R_blk, 1) float32
+    out_cur_ref,  # (R_blk, 1) float32
+    *,
+    sentinel: int,
+    tie_eps: float,
+):
+    lab = lab_ref[...]
+    w = w_ref[...]
+    cur = cur_ref[...][:, 0]
+    rows = rows_ref[...][:, 0]
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+
+    valid = lab != sentinel
+    # score[r, j] = Σ_k w[r, k] · [lab[r, k] == lab[r, j]]
+    eq = lab[:, :, None] == lab[:, None, :]
+    score = jnp.sum(jnp.where(eq, w[:, :, None], 0.0), axis=1)
+    noise = tie_noise_jnp(rows[:, None], lab, seed, tie_eps)
+    eff = jnp.where(valid, score + noise, -jnp.inf)
+
+    best_score = jnp.max(eff, axis=1)
+    is_best = (eff == best_score[:, None]) & valid
+    best_lab = jnp.min(jnp.where(is_best, lab, sentinel), axis=1)
+    best_lab = jnp.where(best_score > -jnp.inf, best_lab, -1)
+
+    eqc = valid & (lab == cur[:, None])
+    cur_sum = jnp.sum(jnp.where(eqc, w, 0.0), axis=1)
+    cur_present = jnp.any(eqc, axis=1)
+    cur_noise = tie_noise_jnp(rows, cur, seed, tie_eps)
+    cur_score = jnp.where(cur_present, cur_sum + cur_noise, 0.0)
+
+    out_lab_ref[...] = best_lab[:, None]
+    out_best_ref[...] = best_score[:, None]
+    out_cur_ref[...] = cur_score[:, None]
+
+
+def label_argmax_pallas(
+    nbr_lab: jax.Array,   # (R, W) int32
+    nbr_w: jax.Array,     # (R, W) float32
+    cur_lab: jax.Array,   # (R,) int32
+    rows: jax.Array,      # (R,) int32
+    seed: jax.Array,      # scalar int/uint32
+    tie_eps: float,
+    sentinel: int,
+    interpret: bool = True,
+    row_block: int | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    R, W = nbr_lab.shape
+    r_blk = row_block or min(pick_row_block(W), R)
+    pad = (-R) % r_blk
+    if pad:
+        nbr_lab = jnp.pad(nbr_lab, ((0, pad), (0, 0)), constant_values=sentinel)
+        nbr_w = jnp.pad(nbr_w, ((0, pad), (0, 0)))
+        cur_lab = jnp.pad(cur_lab, (0, pad), constant_values=sentinel)
+        rows = jnp.pad(rows, (0, pad), constant_values=sentinel)
+    Rp = R + pad
+
+    grid = (Rp // r_blk,)
+    kern = functools.partial(_label_argmax_kernel, sentinel=sentinel, tie_eps=tie_eps)
+    out_lab, out_best, out_cur = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_blk, W), lambda i: (i, 0)),
+            pl.BlockSpec((r_blk, W), lambda i: (i, 0)),
+            pl.BlockSpec((r_blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((r_blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((r_blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((r_blk, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        nbr_lab,
+        nbr_w,
+        cur_lab[:, None],
+        rows[:, None],
+        jnp.asarray(seed, jnp.int32).reshape(1, 1),
+    )
+    return out_lab[:R, 0], out_best[:R, 0], out_cur[:R, 0]

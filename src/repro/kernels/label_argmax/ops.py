@@ -1,0 +1,38 @@
+"""Jit'd public wrapper for the label_argmax kernel (pallas/oracle dispatch)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.label_argmax.kernel import label_argmax_pallas
+from repro.kernels.label_argmax.ref import label_argmax_ref
+
+
+@partial(jax.jit, static_argnames=("tie_eps", "sentinel", "use_pallas", "interpret"))
+def label_argmax(
+    nbr_lab: jax.Array,
+    nbr_w: jax.Array,
+    cur_lab: jax.Array,
+    rows: jax.Array,
+    seed: jax.Array,
+    *,
+    tie_eps: float,
+    sentinel: int,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(best_label, best_score, cur_score) per row; see ref.py for semantics."""
+    nbr_lab = nbr_lab.astype(jnp.int32)
+    nbr_w = nbr_w.astype(jnp.float32)
+    cur_lab = cur_lab.astype(jnp.int32)
+    rows = rows.astype(jnp.int32)
+    if use_pallas:
+        interp = default_interpret() if interpret is None else interpret
+        return label_argmax_pallas(
+            nbr_lab, nbr_w, cur_lab, rows, seed, tie_eps, sentinel, interpret=interp
+        )
+    return label_argmax_ref(nbr_lab, nbr_w, cur_lab, rows, seed, tie_eps, sentinel)

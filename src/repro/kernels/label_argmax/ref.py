@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the PLP weighted-label-mode kernel.
+
+Per row r (one vertex, ELL-padded neighbor tile of width W):
+
+  score(c)  = Σ_k w[r,k] · [lab[r,k] == c] + noise(row_id, c)
+  best      = argmax over candidate labels present in the row
+  cur_score = score(cur_lab[r]) if cur_lab present among neighbors else 0
+
+Matches the segment-path semantics in ``core.moves.plp_best_labels`` (same
+noise formula keyed on (vertex, label)), so segment/ELL/Pallas paths agree.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import tie_noise_jnp
+
+
+def label_argmax_ref(
+    nbr_lab: jax.Array,   # (R, W) int32, ``sentinel`` where padded
+    nbr_w: jax.Array,     # (R, W) float32, 0 where padded
+    cur_lab: jax.Array,   # (R,) int32
+    rows: jax.Array,      # (R,) int32 vertex ids (noise key)
+    seed: jax.Array,      # uint32 scalar
+    tie_eps: float,
+    sentinel: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    valid = nbr_lab != sentinel
+    # pairwise label equality: eq[r, k, j] = lab[r,k] == lab[r,j]
+    eq = nbr_lab[:, :, None] == nbr_lab[:, None, :]
+    score = jnp.sum(jnp.where(eq, nbr_w[:, :, None], 0.0), axis=1)  # (R, W)
+    noise = tie_noise_jnp(rows[:, None], nbr_lab, seed, tie_eps)
+    eff = jnp.where(valid, score + noise, -jnp.inf)
+
+    best_score = jnp.max(eff, axis=1)
+    is_best = (eff == best_score[:, None]) & valid
+    best_lab = jnp.min(jnp.where(is_best, nbr_lab, sentinel), axis=1)
+    best_lab = jnp.where(best_score > -jnp.inf, best_lab, -1)
+
+    eqc = valid & (nbr_lab == cur_lab[:, None])
+    cur_sum = jnp.sum(jnp.where(eqc, nbr_w, 0.0), axis=1)
+    cur_present = jnp.any(eqc, axis=1)
+    cur_noise = tie_noise_jnp(rows, cur_lab, seed, tie_eps)
+    cur_score = jnp.where(cur_present, cur_sum + cur_noise, 0.0)
+    return best_lab, best_score, cur_score

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: block-segmented sum over sorted keys + spine fix-up.
+
+The paper's aggregation merges parallel edges with Arkouda GroupBy —
+effectively a scatter-add after a sort.  TPU scatter-add serializes badly;
+instead, for SORTED keys, each (1, B) block computes within-block run totals
+with a dense (B, B) equality reduction in VMEM (MXU/VPU-friendly), and a tiny
+O(num_blocks) jnp "spine" pass in ops.py stitches runs that cross block
+boundaries.  This is the classic two-level segmented-reduction design (GPU
+block reduce + spine), re-tiled for TPU VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+
+
+def _block_segsum_kernel(keys_ref, vals_ref, out_ref):
+    """out[p] = Σ_q vals[q] · [keys[q] == keys[p]] within the block."""
+    k = keys_ref[...]  # (1, B)
+    v = vals_ref[...]  # (1, B)
+    eq = k[0, :, None] == k[0, None, :]          # (B, B)
+    out = jnp.sum(jnp.where(eq, v[0, :, None], 0.0), axis=0)
+    out_ref[...] = out[None, :]
+
+
+def block_segment_sums_pallas(
+    keys: jax.Array, vals: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = True
+) -> jax.Array:
+    """Per-position within-block run totals; input length must divide ``block``."""
+    m = keys.shape[0]
+    assert m % block == 0, "caller pads to a block multiple"
+    nb = m // block
+    k2 = keys.reshape(nb, block)
+    v2 = vals.reshape(nb, block)
+    out = pl.pallas_call(
+        _block_segsum_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(k2, v2)
+    return out.reshape(m)

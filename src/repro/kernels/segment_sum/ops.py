@@ -1,0 +1,57 @@
+"""Jit'd wrapper: sorted segment sum = block kernel + O(num_blocks) spine fix-up."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.segment_sum.kernel import DEFAULT_BLOCK, block_segment_sums_pallas
+from repro.kernels.segment_sum.ref import sorted_segment_sum_ref
+
+
+@partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
+def sorted_segment_sum(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(sums, starts): run totals at run-start positions of SORTED ``keys``.
+
+    Keys may contain any int32 values (including sentinels) as long as they
+    are non-decreasing; padding added here uses INT32_MAX.
+    """
+    keys = keys.astype(jnp.int32)
+    vals = vals.astype(jnp.float32)
+    if not use_pallas:
+        return sorted_segment_sum_ref(keys, vals)
+
+    interp = default_interpret() if interpret is None else interpret
+    m = keys.shape[0]
+    pad = (-m) % block
+    big = jnp.int32(2**31 - 1)
+    kp = jnp.pad(keys, (0, pad), constant_values=2**31 - 1)
+    vp = jnp.pad(vals, (0, pad))
+    mp = m + pad
+    nb = mp // block
+
+    within = block_segment_sums_pallas(kp, vp, block=block, interpret=interp)
+
+    starts = jnp.concatenate([jnp.ones((1,), bool), kp[1:] != kp[:-1]])
+    rid = jnp.cumsum(starts.astype(jnp.int32)) - 1
+
+    # spine fix-up: attribute each block's first-key partial to the run that
+    # started in an earlier block (skip blocks whose first element IS a start)
+    p0 = jnp.arange(nb, dtype=jnp.int32) * block
+    fs = within[p0]
+    carry_needed = ~starts[p0]
+    contrib = jnp.where(carry_needed, fs, 0.0)
+    extra = jax.ops.segment_sum(contrib, rid[p0], num_segments=mp)
+
+    sums = jnp.where(starts, within + extra[rid], 0.0)
+    return sums[:m], starts[:m]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the sorted segment-sum (aggregation GroupBy reduce).
+
+Semantics: given SORTED int32 ``keys`` (runs of equal keys = segments) and
+float32 ``vals``, return ``(sums, starts)`` where ``starts[p]`` marks the
+first element of each run and ``sums[p]`` is the TOTAL of p's run if
+``starts[p]`` else 0.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sorted_segment_sum_ref(keys: jax.Array, vals: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    m = keys.shape[0]
+    starts = jnp.concatenate(
+        [jnp.ones((1,), bool), keys[1:] != keys[:-1]]
+    )
+    rid = jnp.cumsum(starts.astype(jnp.int32)) - 1
+    totals = jax.ops.segment_sum(vals, rid, num_segments=m)
+    return jnp.where(starts, totals[rid], 0.0), starts

@@ -1,0 +1,1 @@
+"""Launch layer: mesh construction, logical-axis sharding, dry-run, train."""

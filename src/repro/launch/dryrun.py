@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+  * 512 placeholder host devices stand in for 2 pods x 256 chips;
+  * every cell's step function is jit-lowered with ShapeDtypeStruct inputs
+    (zero allocation) and compiled for the production mesh;
+  * ``compiled.memory_analysis()`` proves the per-device working set,
+    ``compiled.cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi   # 2x16x16 only
+Artifacts: benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import api as model_api
+from repro.models.arch_config import SHAPES, cell_applicable
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train_step import (
+    make_decode_step, make_prefill_step, make_train_step)
+from repro.train import optim
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[16,512,128]{...}' -> byte size (0 for tuples/tokens)."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in (per-device) HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    # instruction form: %name = TYPE op-name(...operands...)
+    for m in re.finditer(
+            r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start|-done)?\(([^)]*)\)", hlo_text):
+        result_t, op, operands = m.groups()
+        if op.endswith("-done)"):
+            continue
+        # operand bytes: parse each operand's declared type if present; fall
+        # back to result type (all-reduce/permute: operand size == result)
+        obytes = 0
+        for ot in re.finditer(r"([a-z0-9]+\[[0-9,]*\])", operands):
+            obytes += _shape_bytes(ot.group(1))
+        if obytes == 0:
+            if result_t.startswith("("):
+                for rt in re.finditer(r"([a-z0-9]+\[[0-9,]*\])", result_t):
+                    obytes += _shape_bytes(rt.group(1))
+            else:
+                obytes = _shape_bytes(result_t)
+        out[op]["count"] += 1
+        out[op]["bytes"] += obytes
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if k in _COLLECTIVES)
+    out["total_count"] = sum(v["count"] for k, v in out.items() if k in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_tag: str,
+             *, save: bool = True, hlo_dump: bool = False) -> dict:
+    c = configs.get(arch_id)
+    cell = SHAPES[shape_name]
+    ok, reason = cell_applicable(c, cell)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_tag,
+           "kind": cell.kind, "status": "skipped", "reason": reason}
+    if not ok:
+        return _finish(rec, save)
+
+    model = model_api.build(c)
+    t0 = time.time()
+    try:
+        rules = {"embed_act": "model"} if c.shard_residual_embed else {}
+        with shd.use_mesh(mesh, rules):
+            if cell.kind == "train":
+                opt_cfg = optim.OptimConfig(name=c.optimizer)
+                step, in_sh, out_sh, _ = make_train_step(model, opt_cfg, cell, mesh)
+                pspecs = model_api.to_shape_tree(model.decls)
+                opt_specs = _opt_state_specs(c, model, pspecs)
+                jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(pspecs, opt_specs, model.input_specs(cell))
+            elif cell.kind == "prefill":
+                step, in_sh, out_sh = make_prefill_step(model, cell, mesh)
+                pspecs = model_api.to_shape_tree(model.decls)
+                jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+                lowered = jitted.lower(pspecs, model.input_specs(cell))
+            else:  # decode
+                step, in_sh, out_sh = make_decode_step(model, cell, mesh)
+                pspecs = model_api.to_shape_tree(model.decls)
+                st = model.decode_state_specs(cell)
+                tok = model.input_specs(cell)["token"]
+                jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(pspecs, tok, st)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        from repro.launch import hlo_cost
+        corrected = hlo_cost.analyze(hlo)  # loop-aware per-device costs
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_devices": mesh.devices.size,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            "cost": {
+                "flops_per_device": cost.get("flops"),
+                "bytes_accessed_per_device": cost.get("bytes accessed"),
+            },
+            "cost_loop_aware": corrected,   # see launch/hlo_cost.py
+            "collectives": coll,
+            "model_flops_global": model.model_flops(cell),
+            "active_params": c.active_params(),
+            "total_params": c.total_params(),
+        })
+        # always keep the compiled HLO (gzipped): §Perf re-analysis re-derives
+        # roofline terms from stored IR without recompiling
+        rec["hlo_path"] = _dump_hlo(arch_id, shape_name, mesh_tag, hlo)
+    except Exception as e:  # a cell failure is a bug; record it loudly
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]})
+    return _finish(rec, save)
+
+
+def _opt_state_specs(c, model, pspecs):
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    if c.optimizer == "adamw":
+        f32 = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+        return optim.AdamWState(scalar, f32(pspecs), f32(pspecs))
+    from repro.models.common import is_decl
+
+    def stat(decl):
+        if optim._factored(decl.shape, 128):
+            return {"vr": jax.ShapeDtypeStruct(decl.shape[:-1], jnp.float32),
+                    "vc": jax.ShapeDtypeStruct(decl.shape[:-2] + decl.shape[-1:],
+                                               jnp.float32)}
+        return {"v": jax.ShapeDtypeStruct(decl.shape, jnp.float32)}
+
+    stats = jax.tree.map(stat, model.decls, is_leaf=is_decl)
+    return optim.AdafactorState(scalar, stats)
+
+
+def _dump_hlo(arch, shape, mesh_tag, hlo) -> str:
+    import gzip
+    d = os.path.join(ARTIFACT_DIR, mesh_tag, "hlo")
+    os.makedirs(d, exist_ok=True)
+    p = os.path.join(d, f"{arch}__{shape}.hlo.txt.gz")
+    with gzip.open(p, "wt") as f:
+        f.write(hlo)
+    return p
+
+
+def reanalyze(mesh_tag: str) -> int:
+    """Recompute cost_loop_aware for all cells from stored HLO (no compile)."""
+    import glob
+    import gzip
+    from repro.launch import hlo_cost
+    n = 0
+    for jf in glob.glob(os.path.join(ARTIFACT_DIR, mesh_tag, "*.json")):
+        rec = json.load(open(jf))
+        hp = rec.get("hlo_path", "")
+        if rec.get("status") != "ok" or not hp or not os.path.exists(hp):
+            continue
+        with gzip.open(hp, "rt") as f:
+            hlo = f.read()
+        rec["cost_loop_aware"] = hlo_cost.analyze(hlo)
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        n += 1
+    print(f"[dryrun] reanalyzed {n} cells in mesh '{mesh_tag}'")
+    return n
+
+
+def _finish(rec: dict, save: bool) -> dict:
+    if save:
+        d = os.path.join(ARTIFACT_DIR, rec["mesh"])
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{rec['arch']}__{rec['shape']}.json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    status = rec["status"]
+    extra = rec.get("reason") or rec.get("error", "")
+    print(f"[dryrun] {rec['mesh']:6s} {rec['arch']:28s} {rec['shape']:12s} "
+          f"{status:8s} {extra[:90]}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape cell (default: all)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--hlo-dump", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute costs from stored HLO without compiling")
+    args = ap.parse_args(argv)
+    if args.reanalyze:
+        for tag in (["single", "multi"] if args.mesh == "both" else [args.mesh]):
+            reanalyze(tag)
+        return 0
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    n_fail = 0
+    for mesh_tag, mesh in meshes:
+        for a in archs:
+            for s in shapes:
+                out_p = os.path.join(ARTIFACT_DIR, mesh_tag, f"{a}__{s}.json")
+                if args.skip_existing and os.path.exists(out_p):
+                    with open(out_p) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[dryrun] {mesh_tag:6s} {a:28s} {s:12s} cached")
+                            continue
+                rec = run_cell(a, s, mesh, mesh_tag,
+                               save=True, hlo_dump=args.hlo_dump)
+                n_fail += rec["status"] == "error"
+    print(f"[dryrun] done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,174 @@
+"""Logical-axis sharding: named dims -> mesh axes, MaxText-style.
+
+Model code never mentions mesh axes; it tags tensors/params with *logical*
+names ('embed', 'heads', 'mlp', 'experts', 'batch', ...).  A rule table maps
+logical names to physical mesh axes.  Resolution is divisibility-aware: a rule
+is dropped (dim replicated) when the dim size does not divide the axis size —
+this is what lets one config compile on a laptop (mesh absent -> everything is
+a no-op), a 256-chip pod, and a 512-chip 2-pod mesh without edits.
+
+The rule table below is the baseline (§Perf hillclimbs mutate it):
+
+  'embed'   -> FSDP over ('pod','data')  — weight rows; ZeRO-3-style
+  'vocab', 'heads', 'mlp', 'experts' -> 'model'  — tensor/expert parallel
+  'batch'   -> ('pod','data')            — data parallel activations
+  'heads_act', 'vocab_act' -> 'model'    — activation TP dims
+  'embed_act' -> 'model' iff cfg.shard_residual_embed (SP-like residual)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, object] = {
+    "embed": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "layers": None,
+    "batch": ("pod", "data"),
+    "heads_act": "model",
+    "vocab_act": "model",
+    "experts_act": "model",
+    "embed_act": None,          # flipped to 'model' by shard_residual_embed
+    "kv": None,
+    "seq": None,
+}
+
+
+def _get() -> tuple[Optional[Mesh], dict]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + rule table for logical-axis resolution."""
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", DEFAULT_RULES))
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _get()[0]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def _filter_axes(mesh: Mesh, axis):
+    """Drop axes not present in the mesh (e.g. 'pod' on a single-pod mesh)."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh.shape)
+        return kept if kept else None
+    return axis if axis in mesh.shape else None
+
+
+def resolve_spec(names: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> PS:
+    """Logical names -> PartitionSpec under the active mesh + rules.
+
+    When ``shape`` is given, rules whose axis size does not divide the dim are
+    dropped (replicated) — divisibility-aware resolution.
+    """
+    mesh, rules = _get()
+    if mesh is None:
+        return PS()
+    parts = []
+    used: set = set()
+    for i, nm in enumerate(names):
+        axis = _filter_axes(mesh, rules.get(nm)) if nm else None
+        if axis is not None:
+            flat = axis if isinstance(axis, tuple) else (axis,)
+            if any(a in used for a in flat):
+                axis = None  # an axis may appear once per spec
+        if axis is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, axis) != 0:
+                axis = None
+        if axis is not None:
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                used.add(a)
+        parts.append(axis)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PS(*parts)
+
+
+def sharding_for(names: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+    mesh, _ = _get()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(names, shape))
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint via logical names; identity without a mesh."""
+    mesh, _ = _get()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolve_spec(names, x.shape))
+
+
+# ------------------------------------------------------------ param trees
+
+
+def param_specs(decls) -> object:
+    """ParamDecl tree -> PartitionSpec tree (divisibility-aware)."""
+    from repro.models.common import is_decl
+    return jax.tree.map(
+        lambda d: resolve_spec(d.names, d.shape), decls, is_leaf=is_decl)
+
+
+def param_shardings(decls) -> object:
+    from repro.models.common import is_decl
+    mesh, _ = _get()
+    if mesh is None:
+        raise RuntimeError("param_shardings requires an active mesh")
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, resolve_spec(d.names, d.shape)),
+        decls, is_leaf=is_decl)
+
+
+def spec_bytes_per_device(decls) -> int:
+    """Static estimate: per-device parameter bytes under current rules."""
+    from repro.models.common import is_decl
+    mesh, _ = _get()
+    total = 0
+    for d in jax.tree.leaves(decls, is_leaf=is_decl):
+        n = 1
+        for s in d.shape:
+            n *= s
+        shard = 1
+        spec = resolve_spec(d.names, d.shape)
+        for ax in spec:
+            if ax is not None:
+                shard *= _axis_size(mesh, ax)
+        total += n // max(1, shard) * jnp.dtype(d.dtype).itemsize
+    return total

@@ -1,0 +1,144 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-1.7b ...``.
+
+Fault-tolerance contract (exercised by tests/test_train_loop.py):
+  * checkpoint every ``--ckpt-every`` steps (atomic; see train/checkpoint.py);
+  * on start, auto-resume from the newest committed checkpoint;
+  * ``--simulate-failure-at N`` hard-exits mid-run (os._exit) to prove the
+    next launch resumes losslessly — the data pipeline is counter-based, so
+    batch N after restart is bit-identical to batch N without the failure;
+  * elastic restart: the checkpoint stores unsharded arrays; a restarted run
+    may use a different mesh (device count) and is resharded on restore;
+  * straggler mitigation at scale = synchronous SPMD + per-step watchdog: a
+    step exceeding ``--step-timeout``x the median logs a straggler warning
+    (on real pods this feeds the controller that evicts the slow host).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import api as model_api
+from repro.models.arch_config import ShapeCell
+from repro.models.common import init_params
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optim
+from repro.train.data import DataConfig, make_batch
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train_step import make_train_step
+
+
+def build_trainer(c, cell, mesh=None, opt_cfg=None):
+    """(model, step_fn(params,opt,batch), init_fn) triple."""
+    model = model_api.build(c)
+    opt_cfg = opt_cfg or optim.OptimConfig(name=c.optimizer)
+    step, in_sh, out_sh, _ = make_train_step(model, opt_cfg, cell, mesh)
+    if mesh is not None:
+        step = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(0, 1))
+    else:
+        step = jax.jit(step, donate_argnums=(0, 1))
+
+    def init_fn(seed=0):
+        params = init_params(model.decls, seed=seed)
+        opt_state = optim.init_opt(c.optimizer, params, opt_cfg)
+        return params, opt_state
+
+    return model, step, init_fn
+
+
+def train(c, cell: ShapeCell, *, steps: int, ckpt_dir: str | None = None,
+          ckpt_every: int = 0, mesh=None, seed: int = 0,
+          simulate_failure_at: int = -1, step_timeout_factor: float = 5.0,
+          log_every: int = 10, data_cfg: DataConfig = DataConfig()):
+    model, step_fn, init_fn = build_trainer(c, cell, mesh)
+    start = 0
+    params = opt_state = None
+    if ckpt_dir:
+        last = ckpt_lib.latest_step(ckpt_dir)
+        if last is not None:
+            print(f"[train] resuming from checkpoint step {last}", flush=True)
+            p0, o0 = init_fn(seed)
+            bundle = ckpt_lib.restore(
+                ckpt_dir, last, {"params": p0, "opt": o0},
+                expect_config=c.to_json())
+            params, opt_state = bundle["params"], bundle["opt"]
+            start = last
+    if params is None:
+        params, opt_state = init_fn(seed)
+
+    history = []
+    durations = []
+    for step in range(start, steps):
+        batch_np = make_batch(c, cell, step, data_cfg)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        durations.append(dt)
+        med = float(np.median(durations[-20:]))
+        if len(durations) > 5 and dt > step_timeout_factor * med:
+            print(f"[train] STRAGGLER step {step}: {dt:.2f}s vs median {med:.2f}s",
+                  flush=True)
+        history.append({"step": step, "loss": loss,
+                        "grad_norm": float(metrics["grad_norm"]), "sec": dt})
+        if log_every and step % log_every == 0:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s", flush=True)
+        done = step + 1
+        if ckpt_dir and ckpt_every and done % ckpt_every == 0:
+            ckpt_lib.save(ckpt_dir, done, {"params": params, "opt": opt_state},
+                          config_json=c.to_json(),
+                          mesh_shape=dict(mesh.shape) if mesh else {})
+        if simulate_failure_at >= 0 and done >= simulate_failure_at:
+            print(f"[train] SIMULATED FAILURE at step {done}", flush=True)
+            os._exit(42)
+    return params, opt_state, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1, help="data-parallel size")
+    ap.add_argument("--model", type=int, default=1, help="model-parallel size")
+    ap.add_argument("--simulate-failure-at", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    args, unknown = ap.parse_known_args(argv)
+
+    c = configs.get(args.arch, reduced=args.reduced)
+    from repro.config import apply_overrides, parse_cli_overrides
+    _, overrides = parse_cli_overrides(unknown)
+    if overrides:
+        c = apply_overrides(c, overrides)
+    cell = ShapeCell("cli", "train", args.seq_len, args.global_batch)
+    mesh = None
+    if args.data * args.model > 1:
+        mesh = make_host_mesh(args.data, args.model)
+    rules = {"embed_act": "model"} if c.shard_residual_embed else {}
+    with shd.use_mesh(mesh, rules):
+        _, _, hist = train(
+            c, cell, steps=args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, mesh=mesh, seed=args.seed,
+            simulate_failure_at=args.simulate_failure_at)
+    print(json.dumps({"final_loss": hist[-1]["loss"] if hist else None,
+                      "steps_run": len(hist)}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM model substrate for the ten assigned architectures (DESIGN.md §5)."""

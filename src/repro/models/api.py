@@ -1,0 +1,207 @@
+"""Unified model API: one entry point over all families.
+
+``build(cfg)`` returns a ``ModelAPI`` whose members are pure functions —
+suitable for ``jax.jit`` / ``.lower()`` with ShapeDtypeStruct inputs (the
+dry-run) or real arrays (smoke tests / the training example).
+
+Batch dict conventions:
+  train:    {tokens (B,S) i32, labels (B,S) i32 [, img_embeds | enc_embeds]}
+  prefill:  {tokens (B,S) i32 [, img_embeds | enc_embeds]}
+  decode:   token (B,) i32 + a family-specific decode state pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6, ssm, transformer
+from repro.models.arch_config import ArchConfig, ShapeCell
+from repro.models.common import ParamDecl, to_shape_tree
+
+
+class ModelAPI(NamedTuple):
+    cfg: ArchConfig
+    decls: Any                                     # ParamDecl tree
+    loss_fn: Callable[[Any, Dict], Any]            # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable[[Any, Dict], Any]         # (params, batch) -> logits
+    decode_fn: Callable[[Any, jax.Array, Any], Any]  # (params, token, state)
+    init_decode_state: Callable[..., Any]          # (batch, max_seq) -> state
+    input_specs: Callable[[ShapeCell], Dict[str, jax.ShapeDtypeStruct]]
+    decode_state_specs: Callable[[ShapeCell], Any]
+    model_flops: Callable[[ShapeCell], float]
+
+
+def _token_specs(c: ArchConfig, cell: ShapeCell, with_labels: bool) -> Dict:
+    b, s = cell.global_batch, cell.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if c.family == "vlm":
+        out["img_embeds"] = jax.ShapeDtypeStruct(
+            (b, c.n_img_tokens, c.d_model), jnp.bfloat16)
+    if c.family == "audio":
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, c.n_frames, c.d_model), jnp.bfloat16)
+    return out
+
+
+def _decl_params(decls) -> int:
+    import numpy as np
+    from repro.models.common import is_decl
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(decls, is_leaf=is_decl))
+
+
+def _flops(c: ArchConfig, cell: ShapeCell, decls=None) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens for train, 2·N_active·tokens for fwd."""
+    if decls is not None and c.n_experts == 0:
+        n_act = _decl_params(decls)        # exact for non-MoE
+    else:
+        n_act = c.active_params()
+    toks = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    flops = mult * n_act * toks
+    # attention score/value FLOPs (full-attention archs)
+    if c.family in ("dense", "moe", "vlm", "audio"):
+        hq, hd = c.n_heads, c.hd
+        if cell.kind == "train":
+            flops += 6.0 * 2 * cell.global_batch * hq * hd * cell.seq_len ** 2 / 2 * c.n_layers
+        elif cell.kind == "prefill":
+            flops += 2.0 * 2 * cell.global_batch * hq * hd * cell.seq_len ** 2 / 2 * c.n_layers
+        else:  # decode: q of len 1 against S keys
+            flops += 2.0 * 2 * cell.global_batch * hq * hd * cell.seq_len * c.n_layers
+    return flops
+
+
+def build(c: ArchConfig) -> ModelAPI:
+    fam = c.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        decls = transformer.build_decls(c)
+
+        def loss_fn(params, batch):
+            return transformer.loss_fn(c, params, batch)
+
+        def prefill_fn(params, batch):
+            logits, _ = transformer.forward(
+                c, params, batch["tokens"],
+                img_embeds=batch.get("img_embeds"),
+                enc_embeds=batch.get("enc_embeds"))
+            return logits
+
+        def decode_fn(params, token, state):
+            return transformer.decode_step(c, params, token, state)
+
+        def init_decode_state(params, batch_size, max_seq, *,
+                              img_embeds=None, enc_embeds=None):
+            cache = transformer.init_cache(c, c.n_layers, batch_size, max_seq)
+            xk = xv = None
+            if fam == "vlm":
+                xk, xv = transformer.precompute_cross_kv(c, params, img_embeds, "cross")
+            if fam == "audio":
+                enc = transformer.encode_audio(c, params, enc_embeds)
+                xk, xv = transformer.precompute_cross_kv(c, params, enc, "dec_cross")
+            return transformer.DecodeState(cache, xk, xv)
+
+        def decode_state_specs(cell: ShapeCell):
+            b, s = cell.global_batch, cell.seq_len
+            shape = (c.n_layers, b, c.kv_eff, s, c.hd)
+            pos = jax.ShapeDtypeStruct((b,), jnp.int32)   # per-slot positions
+            if c.kv_cache_dtype == "int8":
+                k = jax.ShapeDtypeStruct(shape, jnp.int8)
+                sc = jax.ShapeDtypeStruct(shape[:-1] + (1,), jnp.float32)
+                cache = transformer.KVCache(k, k, sc, sc, pos)
+            else:
+                k = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+                cache = transformer.KVCache(k, k, None, None, pos)
+            xk = xv = None
+            if fam == "vlm":
+                n_cross = c.n_layers // c.cross_attn_every
+                xk = jax.ShapeDtypeStruct(
+                    (n_cross, b, c.kv_eff, c.n_img_tokens, c.hd), jnp.bfloat16)
+                xv = xk
+            if fam == "audio":
+                xk = jax.ShapeDtypeStruct(
+                    (c.n_layers, b, c.kv_eff, c.n_frames, c.hd), jnp.bfloat16)
+                xv = xk
+            return transformer.DecodeState(cache, xk, xv)
+
+    elif fam == "ssm":
+        decls = rwkv6.build_decls(c)
+
+        def loss_fn(params, batch):
+            return rwkv6.loss_fn(c, params, batch)
+
+        def prefill_fn(params, batch):
+            logits, _ = rwkv6.forward(c, params, batch["tokens"])
+            return logits
+
+        def decode_fn(params, token, state):
+            return rwkv6.decode_step(c, params, token, state)
+
+        def init_decode_state(params, batch_size, max_seq, **_):
+            return rwkv6.init_state(c, batch_size)
+
+        def decode_state_specs(cell: ShapeCell):
+            b = cell.global_batch
+            d = c.d_model
+            H, N = d // c.rwkv_head_dim, c.rwkv_head_dim
+            z = jax.ShapeDtypeStruct((c.n_layers, b, d), jnp.bfloat16)
+            return rwkv6.RWKVState(
+                z, z, jax.ShapeDtypeStruct((c.n_layers, b, H, N, N), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    elif fam == "hybrid":
+        decls = ssm.build_decls(c)
+
+        def loss_fn(params, batch):
+            return ssm.loss_fn(c, params, batch)
+
+        def prefill_fn(params, batch):
+            logits, _ = ssm.forward(c, params, batch["tokens"])
+            return logits
+
+        def decode_fn(params, token, state):
+            return ssm.decode_step(c, params, token, state)
+
+        def init_decode_state(params, batch_size, max_seq, **_):
+            return ssm.init_state(c, batch_size, max_seq)
+
+        def decode_state_specs(cell: ShapeCell):
+            b, s = cell.global_batch, cell.seq_len
+            d_in = c.ssm_expand * c.d_model
+            H = d_in // c.ssm_head_dim
+            conv_ch = d_in + 2 * c.ssm_state
+            conv = jax.ShapeDtypeStruct(
+                (c.n_layers, b, c.conv_width - 1, conv_ch), jnp.bfloat16)
+            ssm_st = jax.ShapeDtypeStruct(
+                (c.n_layers, b, H, c.ssm_state, c.ssm_head_dim), jnp.float32)
+            if c.shared_attn_every:
+                ninv = ssm.n_shared_invocations(c)
+                kz = jax.ShapeDtypeStruct((ninv, b, c.kv_eff, s, c.hd), jnp.bfloat16)
+                return ssm.ZambaState(conv, ssm_st, kz, kz,
+                                      jax.ShapeDtypeStruct((), jnp.int32))
+            return ssm.ZambaState(conv, ssm_st, None, None,
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    def input_specs(cell: ShapeCell):
+        if cell.kind == "train":
+            return _token_specs(c, cell, with_labels=True)
+        if cell.kind == "prefill":
+            return _token_specs(c, cell, with_labels=False)
+        return {"token": jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)}
+
+    return ModelAPI(
+        cfg=c,
+        decls=decls,
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        init_decode_state=init_decode_state,
+        input_specs=input_specs,
+        decode_state_specs=decode_state_specs,
+        model_flops=lambda cell: _flops(c, cell, decls),
+    )

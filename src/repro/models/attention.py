@@ -1,0 +1,152 @@
+"""Attention: GQA with qk-norm, RoPE, chunked (flash-style) softmax, KV cache.
+
+Design notes (DESIGN.md §6):
+  * ``flash_attention``: jnp online-softmax over KV chunks (lax.scan) — keeps
+    the (S, S) score matrix out of memory for 32k prefill; this is the pure-JAX
+    expression of the flash pattern, XLA fuses the inner body.
+  * GQA with TP > n_kv_heads: KV heads are repeated to ``kv_eff`` (a divisor-
+    friendly multiple) at projection time; queries are grouped per effective
+    KV head, so each TP shard holds exactly the KV heads its queries need.
+  * decode: single-token attention over a cache laid out
+    (batch, kv_eff, max_seq, head_dim); a position mask handles partial fill.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, repeats: int) -> jax.Array:
+    """(B, H_kv, S, D) -> (B, H_kv*repeats, S, D), interleaved so that head
+    h_eff = h_orig*repeats + r (query group locality under TP sharding)."""
+    if repeats == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, repeats, s, d)).reshape(
+        b, h * repeats, s, d
+    )
+
+
+def full_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv_eff, Sk, D)
+    v: jax.Array,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hk = k.shape[1]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, sq, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    sk = k.shape[2]
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        scores = jnp.where(kpos <= qpos, scores, NEG_INF)
+    if kv_valid_len is not None:
+        kmask = jnp.arange(sk) < kv_valid_len      # (sk,)
+        scores = jnp.where(kmask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+    return out.reshape(b, hq, sq, d)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv_eff, Sk, D)
+    v: jax.Array,
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (memory O(Sq·chunk)).
+
+    Wrapped in named_scope("flash_attn_interior") so the dry-run profiler
+    (launch/hlo_cost.profile) can attribute the interior HBM traffic that the
+    Pallas kernel (kernels/flash_attention) keeps VMEM-resident on TPU.
+    """
+    with jax.named_scope("flash_attn_interior"):
+        return _flash_attention_jnp(q, k, v, causal, chunk)
+
+
+def _flash_attention_jnp(q, k, v, causal, chunk):
+    b, hq, sq, d = q.shape
+    hk, sk = k.shape[1], k.shape[2]
+    g = hq // hk
+    if sk <= chunk or sk % chunk != 0:
+        # short or non-tileable KV (e.g. whisper's 1500 frames): dense path
+        return full_attention(q, k, v, causal)
+    nchunks = sk // chunk
+    qg = q.reshape(b, hk, g, sq, d)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(sq)[:, None]
+
+    kc = k.reshape(b, hk, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hk, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, xs):
+        acc, m, l, ci = carry
+        kb, vb = xs  # (B, hk, chunk, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb).astype(jnp.float32) * scale
+        if causal:
+            kpos = ci * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (acc_new, m_new, l_new, ci + 1), None
+
+    acc0 = jnp.zeros((b, hk, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(body, (acc0, m0, l0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).reshape(b, hq, sq, d)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, Hq, 1, D)
+    k_cache: jax.Array,    # (B, Hkv_eff, S_max, D)
+    v_cache: jax.Array,
+    valid_len: jax.Array,  # scalar or (B,) — filled cache length incl. this step
+) -> jax.Array:
+    b, hq, _, d = q.shape
+    hk, smax = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    vl = jnp.asarray(valid_len)
+    if vl.ndim == 0:
+        mask = jnp.arange(smax)[None, None, None, :] < vl
+    else:
+        mask = jnp.arange(smax)[None, :] < vl[:, None]
+        mask = mask[:, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache)
+    return out.reshape(b, hq, 1, d)
+
+
+def update_cache(
+    k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array, v_new: jax.Array,
+    position: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Insert (B, H, S_new, D) at ``position`` along the seq axis."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), position, axis=2
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), position, axis=2
+    )
+    return k_cache, v_cache

@@ -1,0 +1,152 @@
+"""Model-building primitives: param declarations, norms, RoPE, init.
+
+Parameters are declared as trees of ``ParamDecl`` — (shape, logical dim names,
+dtype, init) — so the same declaration serves three consumers:
+  * ``to_shape_tree``      -> ShapeDtypeStructs for the dry-run ``.lower()``
+  * ``init_params``        -> real arrays for CPU smoke tests
+  * ``distributed.sharding.build_specs`` -> divisibility-aware PartitionSpecs
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    names: Tuple[Optional[str], ...]   # logical dim names (None = no sharding)
+    # f32 master weights (MaxText convention): compute casts to bf16 at the
+    # scan-body slice via ``cast_compute`` — see §Perf "f32-master-params".
+    dtype: Any = jnp.float32
+    init: str = "normal"               # normal | zeros | ones | embed | small
+    scale: float = 1.0                 # fan-in style multiplier for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def to_shape_tree(decls) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls, is_leaf=is_decl
+    )
+
+
+def names_tree(decls) -> Any:
+    return jax.tree.map(lambda d: d.names, decls, is_leaf=is_decl)
+
+
+def init_params(decls, seed: int = 0) -> Any:
+    """Materialize real parameters (smoke tests / examples; NOT the dry-run)."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=is_decl)
+    rng = np.random.default_rng(seed)
+    out = []
+    for d in leaves:
+        if d.init == "zeros":
+            a = np.zeros(d.shape, np.float32)
+        elif d.init == "ones":
+            a = np.ones(d.shape, np.float32)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(1, fan_in))
+            if d.init == "embed":
+                std = 0.02 * d.scale
+            elif d.init == "small":
+                std = 1e-3 * d.scale
+            a = rng.normal(0.0, std, d.shape).astype(np.float32)
+        out.append(jnp.asarray(a, dtype=d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------- layers
+
+
+def cast_compute(tree, dtype=jnp.bfloat16):
+    """Cast f32 weight leaves to the compute dtype at USE site (inside scan
+    bodies).  Params are STORED f32 (master weights); casting per-layer-slice
+    keeps the backward scan's gradient stacks f32 end-to-end, which removes
+    the full-stack bf16<->f32 convert round-trips XLA otherwise materializes
+    per layer iteration (§Perf iteration "f32-master-params")."""
+    return jax.tree.map(
+        lambda t: t.astype(dtype) if (hasattr(t, "dtype") and t.dtype == jnp.float32
+                                      and t.ndim >= 2) else t, tree)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e6) -> jax.Array:
+    """x: (..., seq, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, w_down)
+
+
+def squared_relu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """Nemotron-4 style: relu(xW1)² W2."""
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up: jax.Array, w_down: jax.Array, b_down: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_up) + b_up.astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_down) + b_down.astype(x.dtype)
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None,
+    vocab_valid: int | None = None,
+) -> jax.Array:
+    """Stable CE over (possibly padded, possibly vocab-sharded) logits."""
+    lg = logits.astype(jnp.float32)
+    if vocab_valid is not None and vocab_valid < lg.shape[-1]:
+        pad = jnp.arange(lg.shape[-1]) >= vocab_valid
+        lg = jnp.where(pad, -1e30, lg)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

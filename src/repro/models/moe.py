@@ -1,0 +1,145 @@
+"""Mixture-of-Experts layer: GROUP-LOCAL sort-based dispatch (GSPMD-style).
+
+The dispatch is the same sort+segment GroupBy pattern as the paper's Louvain
+aggregation (DESIGN.md §5 kinship).  V1 used one flat dispatch over all
+global tokens — profiling the dry-run showed XLA turning the global
+gather/scatter into per-layer all-reduces of full activation buffers
+(§Perf iteration "moe-group-dispatch", before: collective term 51.3 s on
+qwen3-moe train_4k).  V2 restructures the computation so every gather /
+scatter is LOCAL to a data shard:
+
+  x (B,S,D) -> (G, Tg, D)        G = number of data shards (static)
+  router/top-k/sort/capacity     per group, vmapped — no cross-group indices
+  buf (G, E, Cg, D)              scatter within group (local)
+  constrain E -> 'model'         THE one reshard (data-sharded G stays)
+  expert FFN                     einsum batched over (G, Cg) — fully local
+  scatter-back partial y + sum   partials over 'model' — one reduction
+
+Aux losses: Switch load-balance + router z-loss, averaged over groups.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import active_mesh, constrain
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def _n_groups(total_tokens: int) -> int:
+    """Static dispatch-group count = data-parallel extent of the active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        g *= mesh.shape.get(ax, 1)
+    while g > 1 and total_tokens % g:
+        g //= 2
+    return max(1, g)
+
+
+def _dispatch_indices(expert_ids: jax.Array, n_experts: int, capacity: int):
+    """expert_ids: (T,) int32 — returns (slot, keep): slot in [0, E*C)."""
+    t = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    starts = jnp.concatenate([jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    pos = jnp.arange(t, dtype=jnp.int32)
+    run_start_pos = jnp.where(starts, pos, 0)
+    run_start_pos = jax.lax.associative_scan(jnp.maximum, run_start_pos)
+    rank_sorted = pos - run_start_pos
+    rank = jnp.zeros((t,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < capacity
+    slot = jnp.clip(expert_ids, 0, n_experts - 1) * capacity + jnp.clip(
+        rank, 0, capacity - 1
+    )
+    return slot, keep
+
+
+def moe_layer(
+    x: jax.Array,            # (B, S, D)
+    w_router: jax.Array,     # (D, E)
+    w_gate: jax.Array,       # (E, D, F)
+    w_up: jax.Array,         # (E, D, F)
+    w_down: jax.Array,       # (E, F, D)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_z_coef: float = 1e-3,
+    balance_coef: float = 1e-2,
+) -> MoEOut:
+    b, s, d = x.shape
+    e = w_router.shape[-1]
+    t = b * s
+    G = _n_groups(t)
+    tg = t // G
+    xg = x.reshape(G, tg, d)
+    xg = constrain(xg, ("batch", None, None))           # G over data axes
+
+    # expert weights: constrain to expert-sharding only at USE site — when
+    # stored FSDP ('embed' over data) this is an explicit per-layer weight
+    # all-gather instead of an (8x bigger) activation psum
+    w_gate = constrain(w_gate, ("experts_act", None, None))
+    w_up = constrain(w_up, ("experts_act", None, None))
+    w_down = constrain(w_down, ("experts_act", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)          # (G, Tg, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    capacity = max(8, int(capacity_factor * top_k * tg / e))
+    flat_e = top_e.reshape(G, tg * top_k).astype(jnp.int32)
+    flat_w = top_p.reshape(G, tg * top_k)
+    slot, keep = jax.vmap(
+        lambda ids: _dispatch_indices(ids, e, capacity))(flat_e)
+
+    token_of = jnp.tile(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), top_k)[None], (G, 1))
+
+    def scatter_group(xt_g, slot_g, keep_g, token_g):
+        buf = jnp.zeros((e * capacity, d), x.dtype)
+        idx = jnp.where(keep_g, slot_g, e * capacity - 1)
+        return buf.at[idx].add(
+            jnp.where(keep_g[:, None], xt_g[token_g], 0).astype(x.dtype))
+
+    buf = jax.vmap(scatter_group)(xg, slot, keep, token_of)   # (G, E*C, D)
+    buf = buf.reshape(G, e, capacity, d)
+    # THE reshard: G stays on data axes, experts go to 'model'
+    buf = constrain(buf, ("batch", "experts_act", None, None))
+
+    # expert FFN (SwiGLU), batched over (G, C)
+    g_ = jnp.einsum("gecd,edf->gecf", buf, w_gate)
+    u_ = jnp.einsum("gecd,edf->gecf", buf, w_up)
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u_
+    yb = jnp.einsum("gecf,efd->gecd", h, w_down)
+    yb = constrain(yb, ("batch", "experts_act", None, None))
+    yb = yb.reshape(G, e * capacity, d)
+
+    # combine: gather each assignment's expert output within its group,
+    # weight, scatter-add back to token positions (partials summed over the
+    # expert shards by the partitioner)
+    def combine_group(yb_g, slot_g, keep_g, w_g, token_g):
+        contrib = jnp.where(keep_g[:, None],
+                            yb_g[jnp.clip(slot_g, 0, e * capacity - 1)], 0)
+        contrib = contrib * w_g[:, None].astype(x.dtype)
+        return jnp.zeros((tg, d), x.dtype).at[token_g].add(contrib)
+
+    y = jax.vmap(combine_group)(yb, slot, keep, flat_w, token_of)
+    y = constrain(y, ("batch", None, None))
+
+    # Switch aux losses (group-averaged)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    one_hot_top1 = jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    balance = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = balance_coef * balance + router_z_coef * z
+    return MoEOut(y.reshape(b, s, d), aux.astype(jnp.float32))

@@ -1,0 +1,357 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid (arXiv:2411.15242).
+
+Zamba2 = a backbone of Mamba2 layers with ONE shared full-attention
+transformer block (weights tied across invocations) applied every
+``shared_attn_every`` layers on concat(hidden, original_embedding) — the
+paper's "shared attn blocks".
+
+Mamba2 SSD is implemented in the chunked parallel form (the TPU-native
+factorization, mirrors rwkv6.py): per-head scalar decay a·dt, intra-chunk
+masked (C x C) einsum on the MXU, inter-chunk (H, N, P) state carried by
+``lax.scan``.  Decode is the O(1) recurrence with a rolling conv buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.arch_config import ArchConfig
+from repro.models.common import (
+    ParamDecl, apply_rope, cast_compute, cross_entropy_loss, rms_norm)
+from repro.launch.sharding import constrain
+
+P = ParamDecl
+
+
+def _dims(c: ArchConfig):
+    d_in = c.ssm_expand * c.d_model
+    H = d_in // c.ssm_head_dim
+    N = c.ssm_state
+    G = 1  # n_groups
+    conv_ch = d_in + 2 * G * N
+    return d_in, H, N, G, conv_ch
+
+
+def build_decls(c: ArchConfig) -> Dict[str, Any]:
+    d, L = c.d_model, c.n_layers
+    d_in, H, N, G, conv_ch = _dims(c)
+    proj_out = 2 * d_in + 2 * G * N + H
+    lyr = {
+        "ln": P((L, d), ("layers", None), init="zeros"),
+        "in_proj": P((L, d, proj_out), ("layers", "embed", "mlp")),
+        "conv_w": P((L, c.conv_width, conv_ch), ("layers", None, None), init="small"),
+        "conv_b": P((L, conv_ch), ("layers", None), init="zeros"),
+        "dt_bias": P((L, H), ("layers", "heads"), init="zeros"),
+        "a_log": P((L, H), ("layers", "heads"), init="zeros"),
+        "d_skip": P((L, H), ("layers", "heads"), init="ones"),
+        "norm_y": P((L, d_in), ("layers", "mlp"), init="zeros"),
+        "out_proj": P((L, d_in, d), ("layers", "mlp", "embed")),
+    }
+    out: Dict[str, Any] = {
+        "embed": P((c.vocab_size, d), ("vocab", "embed"), init="embed"),
+        "final_norm": P((d,), (None,), init="zeros"),
+        "unembed": P((d, c.vocab_size), ("embed", "vocab")),
+        "mamba_layers": lyr,
+    }
+    if c.shared_attn_every:
+        hq = c.n_heads * c.hd
+        out["shared"] = {
+            "ln": P((2 * d,), (None,), init="zeros"),
+            "wq": P((2 * d, hq), ("embed", "heads")),
+            "wk": P((2 * d, c.n_kv_heads * c.hd), ("embed", None)),
+            "wv": P((2 * d, c.n_kv_heads * c.hd), ("embed", None)),
+            "wo": P((hq, d), ("heads", "embed")),
+            "ln_mlp": P((2 * d,), (None,), init="zeros"),
+            "w_gate": P((2 * d, c.d_ff), ("embed", "mlp")),
+            "w_up": P((2 * d, c.d_ff), ("embed", "mlp")),
+            "w_down": P((c.d_ff, d), ("mlp", "embed")),
+        }
+    return out
+
+
+# ----------------------------------------------------------------- SSD math
+
+
+def _ssd_chunked(x, dt, a, B, C, state, chunk: int):
+    """Chunked SSD scan.
+
+    x: (Bt,S,H,P); dt: (Bt,S,H) (post-softplus); a: (H,) (negative);
+    B, C: (Bt,S,G=1,N); state: (Bt,H,N,P) f32.
+    Returns (y (Bt,S,H,P) f32, new state).
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    xr = x.reshape(bt, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)   # (nc,Bt,H,C,P)
+    dtr = dt.reshape(bt, nc, chunk, h).transpose(1, 0, 3, 2)       # (nc,Bt,H,C)
+    Br = B.reshape(bt, nc, chunk, n).transpose(1, 0, 2, 3)         # (nc,Bt,C,N)
+    Cr = C.reshape(bt, nc, chunk, n).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))                 # incl diag
+
+    def body(S, xs):
+        xb, dtb, Bb, Cb = xs
+        xb32 = xb.astype(jnp.float32)
+        lc = jnp.cumsum(a[None, :, None] * dtb, axis=-1)           # (Bt,H,C) <=0
+        # intra: M[t,s] = (C_t.B_s) exp(lc_t - lc_s) dt_s   (s <= t)
+        cb = jnp.einsum("btn,bsn->bts", Cb.astype(jnp.float32), Bb.astype(jnp.float32))
+        q_dec = jnp.exp(lc)                                        # (Bt,H,C)
+        k_dec = jnp.exp(-lc) * dtb                                 # (Bt,H,C)
+        M = cb[:, None] * q_dec[..., :, None] * k_dec[..., None, :]
+        M = jnp.where(tri, M, 0.0)
+        y = jnp.einsum("bhts,bhsp->bhtp", M, xb32)
+        # inter: y[t] += C_t . (exp(lc_t) S)
+        y = y + jnp.einsum("btn,bhnp,bht->bhtp", Cb.astype(jnp.float32), S, q_dec)
+        # state: S' = exp(lc_last) S + sum_s exp(lc_last - lc_s) dt_s B_s x_s
+        lc_last = lc[..., -1:]
+        w = jnp.exp(lc_last - lc) * dtb                            # (Bt,H,C)
+        S = jnp.exp(lc_last)[..., None] * S + jnp.einsum(
+            "bsn,bhsp,bhs->bhnp", Bb.astype(jnp.float32), xb32, w)
+        return S, y
+
+    state, y = jax.lax.scan(body, state.astype(jnp.float32), (xr, dtr, Br, Cr))
+    y = y.transpose(1, 0, 3, 2, 4).reshape(bt, s, h, p)
+    return y, state
+
+
+def _ssd_step(x, dt, a, B, C, state):
+    """One-token SSD: x (Bt,H,P), dt (Bt,H), B/C (Bt,N), state (Bt,H,N,P)."""
+    x32 = x.astype(jnp.float32)
+    decay = jnp.exp(a[None] * dt)                                   # (Bt,H)
+    upd = jnp.einsum("bn,bhp,bh->bhnp", B.astype(jnp.float32), x32, dt)
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), state)
+    return y, state
+
+
+def _split_proj(c: ArchConfig, zxbcdt):
+    d_in, H, N, G, _ = _dims(c)
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xc, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via K shifted adds. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    y = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    """Mamba2 out-norm: rmsnorm(y * silu(z))."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return rms_norm(y, scale, eps)
+
+
+def _mamba_block(c: ArchConfig, p, x, conv_state, ssm_state, *, chunk):
+    """x: (B,S,D) normed input.  Returns (y, conv_tail, ssm_state)."""
+    b, s, d = x.shape
+    d_in, H, N, G, conv_ch = _dims(c)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xc, B, C, dt = _split_proj(c, zxbcdt)
+    xbc = jnp.concatenate([xc, B, C], axis=-1)                      # (B,S,conv_ch)
+    # prepend carried conv tail (K-1 tokens) for cross-segment correctness
+    k = c.conv_width
+    xbc_ext = jnp.concatenate([conv_state, xbc], axis=1)            # (B,S+K-1,..)
+    conv = _causal_conv(xbc_ext, p["conv_w"], p["conv_b"])[:, k - 1:]
+    xc2, B2, C2 = jnp.split(conv, [d_in, d_in + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc2.reshape(b, s, H, c.ssm_head_dim)
+    from repro.models.rwkv6 import pick_chunk
+    y, ssm_state = _ssd_chunked(xh, dt, a, B2, C2, ssm_state,
+                                chunk=pick_chunk(s, chunk))
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_y"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, xbc_ext[:, -(k - 1):], ssm_state
+
+
+def _shared_attn_block(c: ArchConfig, p, x, x0, positions, cache=None, pos=None):
+    """Zamba2 shared block on concat(x, x0); returns (x, new kv slice)."""
+    b = x.shape[0]
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = rms_norm(h2, p["ln"])
+    hd, hq, hkv = c.hd, c.n_heads, c.n_kv_heads
+    sq = x.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", h2, p["wq"]).reshape(b, sq, hq, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,dh->bsh", h2, p["wk"]).reshape(b, sq, hkv, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,dh->bsh", h2, p["wv"]).reshape(b, sq, hkv, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, c.rope_theta)
+    k = apply_rope(k, positions, c.rope_theta)
+    reps = c.kv_eff // hkv
+    k = attn_lib.repeat_kv(k, reps)
+    v = attn_lib.repeat_kv(v, reps)
+    new_kv = None
+    if cache is None:
+        o = attn_lib.flash_attention(q, k, v, causal=True, chunk=min(1024, sq))
+    else:
+        ck, cv = cache
+        ck, cv = attn_lib.update_cache(ck, cv, k, v, pos)
+        o = attn_lib.decode_attention(q, ck, cv, pos + 1)
+        new_kv = (ck, cv)
+    o = o.transpose(0, 2, 1, 3).reshape(b, sq, hq * hd)
+    x = x + jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    h2 = rms_norm(jnp.concatenate([x, x0], axis=-1), p["ln_mlp"])
+    g = jnp.einsum("bsd,df->bsf", h2, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", h2, p["w_up"])
+    m = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    x = x + jnp.einsum("bsf,fd->bsd", m, p["w_down"])
+    return x, new_kv
+
+
+class ZambaState(NamedTuple):
+    conv: jax.Array            # (L, B, K-1, conv_ch)
+    ssm: jax.Array             # (L, B, H, N, P) f32
+    attn_k: Optional[jax.Array]  # (n_inv, B, H_eff, S_max, hd)
+    attn_v: Optional[jax.Array]
+    pos: jax.Array
+
+
+def n_shared_invocations(c: ArchConfig) -> int:
+    return c.n_layers // c.shared_attn_every if c.shared_attn_every else 0
+
+
+def init_state(c: ArchConfig, batch: int, max_seq: int) -> ZambaState:
+    d_in, H, N, G, conv_ch = _dims(c)
+    conv = jnp.zeros((c.n_layers, batch, c.conv_width - 1, conv_ch), jnp.bfloat16)
+    ssm = jnp.zeros((c.n_layers, batch, H, N, c.ssm_head_dim), jnp.float32)
+    if c.shared_attn_every:
+        ninv = n_shared_invocations(c)
+        kz = jnp.zeros((ninv, batch, c.kv_eff, max_seq, c.hd), jnp.bfloat16)
+        return ZambaState(conv, ssm, kz, kz, jnp.int32(0))
+    return ZambaState(conv, ssm, None, None, jnp.int32(0))
+
+
+def forward(c: ArchConfig, params, tokens):
+    """Training/prefill forward -> (logits, aux)."""
+    b, s = tokens.shape
+    x0 = params["embed"][tokens].astype(jnp.bfloat16)
+    x = constrain(x0, ("batch", None, "embed_act"))
+    positions = jnp.arange(s)
+    d_in, H, N, G, conv_ch = _dims(c)
+    every = c.shared_attn_every or (c.n_layers + 1)
+    n_groups = c.n_layers // every
+    tail = c.n_layers - n_groups * every
+
+    def mamba_body(h, lp):
+        lp = cast_compute(lp)
+        zc = jnp.zeros((b, c.conv_width - 1, conv_ch), jnp.bfloat16)
+        zs = jnp.zeros((b, H, N, c.ssm_head_dim), jnp.float32)
+        y, _, _ = _mamba_block(c, lp, rms_norm(h, lp["ln"]), zc, zs, chunk=c.chunk_size)
+        h = h + y
+        return constrain(h, ("batch", None, "embed_act")), None
+
+    mamba_body = jax.checkpoint(
+        mamba_body, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False)
+
+    if n_groups:
+        grouped = jax.tree.map(
+            lambda t: t[: n_groups * every].reshape((n_groups, every) + t.shape[1:]),
+            params["mamba_layers"])
+
+        shared_c = cast_compute(params["shared"])
+
+        def group_body(h, gp):
+            h, _ = _shared_attn_block(c, shared_c, h, x0, positions)
+            h, _ = jax.lax.scan(mamba_body, h, gp)
+            return h, None
+
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+        x, _ = jax.lax.scan(group_body, x, grouped)
+    if tail:
+        tail_stack = jax.tree.map(lambda t: t[-tail:], params["mamba_layers"])
+        x, _ = jax.lax.scan(mamba_body, x, tail_stack)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return constrain(logits, ("batch", None, "vocab_act")), jnp.float32(0.0)
+
+
+def loss_fn(c: ArchConfig, params, batch):
+    logits, aux = forward(c, params, batch["tokens"])
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def decode_step(c: ArchConfig, params, token, state: ZambaState):
+    """One-token decode with conv/ssm/attn-cache state."""
+    b = token.shape[0]
+    d_in, H, N, G, conv_ch = _dims(c)
+    x0 = params["embed"][token].astype(jnp.bfloat16)[:, None]
+    x = x0
+    pos = state.pos
+    every = c.shared_attn_every or (c.n_layers + 1)
+    n_groups = c.n_layers // every
+    tail = c.n_layers - n_groups * every
+    k = c.conv_width
+
+    def mamba_step(h, lp, conv_st, ssm_st):
+        lp = cast_compute(lp)
+        xin = rms_norm(h, lp["ln"])
+        zxbcdt = jnp.einsum("bsd,de->bse", xin, lp["in_proj"])
+        z, xc, B, C, dt = _split_proj(c, zxbcdt)
+        xbc = jnp.concatenate([xc, B, C], axis=-1)        # (B,1,conv_ch)
+        xbc_ext = jnp.concatenate([conv_st, xbc], axis=1)  # (B,K,conv_ch)
+        conv = jnp.einsum("bkc,kc->bc", xbc_ext.astype(jnp.float32),
+                          lp["conv_w"].astype(jnp.float32))
+        conv = jax.nn.silu(conv + lp["conv_b"].astype(jnp.float32)).astype(h.dtype)
+        xc2, B2, C2 = jnp.split(conv, [d_in, d_in + G * N], axis=-1)
+        dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                              + lp["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+        xh = xc2.reshape(b, H, c.ssm_head_dim)
+        y, ssm_st = _ssd_step(xh, dtv, a, B2, C2, ssm_st)
+        y = y + lp["d_skip"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, 1, d_in).astype(h.dtype)
+        y = _gated_rmsnorm(y, z, lp["norm_y"])
+        h = h + jnp.einsum("bse,ed->bsd", y, lp["out_proj"])
+        return h, xbc_ext[:, 1:], ssm_st
+
+    def mamba_scan(h, stack, conv_sts, ssm_sts):
+        def body(hh, xs):
+            lp, cst, sst = xs
+            hh, cst, sst = mamba_step(hh, lp, cst, sst)
+            return hh, (cst, sst)
+        h, (ncv, nss) = jax.lax.scan(body, h, (stack, conv_sts, ssm_sts))
+        return h, ncv, nss
+
+    new_conv, new_ssm = [], []
+    nk, nv = state.attn_k, state.attn_v
+    li = 0
+    if n_groups:
+        for gi in range(n_groups):
+            sl = slice(li, li + every)
+            if nk is not None:
+                x, (ck, cv) = _shared_attn_block(
+                    c, cast_compute(params["shared"]), x, x0, pos[None],
+                    cache=(nk[gi], nv[gi]), pos=pos)
+                nk = nk.at[gi].set(ck)
+                nv = nv.at[gi].set(cv)
+            stack = jax.tree.map(lambda t: t[sl], params["mamba_layers"])
+            x, ncv, nss = mamba_scan(x, stack, state.conv[sl], state.ssm[sl])
+            new_conv.append(ncv)
+            new_ssm.append(nss)
+            li += every
+    if tail:
+        stack = jax.tree.map(lambda t: t[li:], params["mamba_layers"])
+        x, ncv, nss = mamba_scan(x, stack, state.conv[li:], state.ssm[li:])
+        new_conv.append(ncv)
+        new_ssm.append(nss)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))[:, 0]
+    new_state = ZambaState(
+        jnp.concatenate(new_conv), jnp.concatenate(new_ssm), nk, nv, pos + 1)
+    return constrain(logits, ("batch", "vocab_act")), new_state

@@ -1,0 +1,131 @@
+"""Checkpointing with fault-tolerance semantics.
+
+Production behaviours implemented (single-host file backend; the same layout
+maps onto a parallel filesystem / object store at scale):
+  * ATOMIC saves: write to ``step_N.tmp/`` then ``rename`` — a crash mid-save
+    never corrupts the latest checkpoint;
+  * MANIFEST (json): step, config, mesh shape, leaf treedef — restore
+    validates it against the running config and REJECTS mismatches loudly;
+  * retention: keep the newest ``keep`` checkpoints, delete older ones only
+    AFTER the new save committed;
+  * ELASTIC restore: arrays are saved unsharded (gathered); restore reshards
+    onto whatever mesh the new run has — a restart may use a different
+    device count (node failure -> shrink; recovery -> grow);
+  * partial-failure recovery: ``latest_step`` skips .tmp directories, so a
+    killed run resumes from the last committed step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _leaf_paths(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key.replace("'", ""), leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, config_json: str = "{}",
+         mesh_shape: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomically save ``tree`` (params/opt/step bundle) at ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "config": json.loads(config_json),
+                "mesh_shape": mesh_shape or {}, "leaves": []}
+    for key, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        # save a flat uint8 view: np.save corrupts ml_dtypes (bf16 -> '|V2');
+        # true dtype/shape travel in the manifest
+        flat = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+        np.save(os.path.join(tmp, fname), flat)
+        manifest["leaves"].append({"key": key, "file": fname,
+                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # commit point
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, *,
+            shardings: Any = None, expect_config: Optional[str] = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of NamedShardings for
+    elastic resharding (optional — host arrays otherwise)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if expect_config is not None:
+        saved = json.dumps(manifest["config"], sort_keys=True)
+        want = json.dumps(json.loads(expect_config), sort_keys=True)
+        if saved != want:
+            raise ValueError(
+                "checkpoint config mismatch — refusing to restore "
+                f"(saved != running):\n{saved}\nvs\n{want}")
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    keys = [k for k, _ in _leaf_paths(like)]
+    sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(flat))
+    out = []
+    for key, leaf, sh in zip(keys, flat, sh_flat):
+        meta = by_key.get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        raw = np.load(os.path.join(path, meta["file"]))
+        arr = np.frombuffer(raw.tobytes(), dtype=_np_dtype(meta["dtype"]))
+        arr = arr.reshape(meta["shape"])
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"leaf '{key}': shape {arr.shape} != {want_shape}")
+        # device_put: reshard onto the target sharding (elastic) or default
+        arr = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

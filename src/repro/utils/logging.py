@@ -1,0 +1,24 @@
+"""Structured logging with a consistent prefix, used across the launchers."""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_CONFIGURED = False
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    global _CONFIGURED
+    if not _CONFIGURED:
+        level = os.environ.get("REPRO_LOG_LEVEL", "INFO").upper()
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(
+            logging.Formatter("[%(asctime)s %(name)s %(levelname).1s] %(message)s", "%H:%M:%S")
+        )
+        root = logging.getLogger("repro")
+        root.addHandler(handler)
+        root.setLevel(level)
+        root.propagate = False
+        _CONFIGURED = True
+    return logging.getLogger(name)

@@ -1,0 +1,22 @@
+"""Deterministic PRNG key derivation.
+
+Every stochastic component (init, data order, dropout, generators) derives its
+key from a (seed, name, step) triple so that restarts and elastic re-shards are
+bit-exact — a requirement for the fault-tolerance story (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+
+def named_key(seed: int, name: str, step: int = 0) -> jax.Array:
+    """Stable key from (seed, name, step); independent of call order."""
+    digest = hashlib.blake2b(f"{name}:{step}".encode(), digest_size=4).digest()
+    fold = int.from_bytes(digest, "little")
+    return jax.random.fold_in(jax.random.key(seed), fold)
+
+
+def split_named(seed: int, name: str, n: int, step: int = 0) -> list[jax.Array]:
+    return list(jax.random.split(named_key(seed, name, step), n))

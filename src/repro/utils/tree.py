@@ -1,0 +1,65 @@
+"""Pytree helpers: parameter counting, byte accounting, flat dict views."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def param_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def flatten_dict(tree: Any, sep: str = "/") -> Dict[str, Any]:
+    """Flatten a pytree into {path: leaf} using jax key paths."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = sep.join(_key_str(k) for k in path)
+        flat[key] = leaf
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def unflatten_like(template: Any, flat: Dict[str, Any], sep: str = "/") -> Any:
+    """Rebuild a pytree with the structure of ``template`` from a flat dict."""
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree.structure(template)
+    leaves = []
+    for path, _ in paths:
+        key = sep.join(_key_str(k) for k in path)
+        if key not in flat:
+            raise KeyError(f"missing leaf '{key}' when unflattening")
+        leaves.append(flat[key])
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)

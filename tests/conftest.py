@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+distributed tests spawn subprocesses with their own device-count flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,149 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the jnp oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.label_argmax import ops as la_ops
+from repro.kernels.segment_sum import ops as ss_ops
+from repro.kernels.delta_q import ops as dq_ops
+
+
+@pytest.mark.parametrize("rows,width", [(8, 8), (16, 32), (64, 16), (128, 128),
+                                        (33, 8)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_label_argmax_matches_ref(rows, width, seed):
+    rng = np.random.default_rng(seed)
+    n_labels = 7
+    sentinel = 1000
+    nbr_lab = rng.integers(0, n_labels, (rows, width)).astype(np.int32)
+    # inject padding entries (sentinel labels, zero weight)
+    pad = rng.random((rows, width)) < 0.2
+    nbr_lab = np.where(pad, sentinel, nbr_lab)
+    w = np.where(pad, 0.0, rng.random((rows, width))).astype(np.float32)
+    cur = rng.integers(0, n_labels, (rows,)).astype(np.int32)
+    rows_idx = np.arange(rows, dtype=np.int32)
+    args = (jnp.asarray(nbr_lab), jnp.asarray(w), jnp.asarray(cur),
+            jnp.asarray(rows_idx), jnp.uint32(seed))
+    kw = dict(tie_eps=0.1, sentinel=sentinel)
+    out_p = la_ops.label_argmax(*args, use_pallas=True, **kw)
+    out_r = la_ops.label_argmax(*args, use_pallas=False, **kw)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,block", [(64, 16), (512, 128), (1000, 256)])
+def test_sorted_segment_sum_matches_ref(m, block):
+    rng = np.random.default_rng(m)
+    keys = np.sort(rng.integers(0, 50, m)).astype(np.int32)
+    vals = rng.standard_normal(m).astype(np.float32)
+    out_p = ss_ops.sorted_segment_sum(jnp.asarray(keys), jnp.asarray(vals),
+                                      block=block, use_pallas=True)
+    out_r = ss_ops.sorted_segment_sum(jnp.asarray(keys), jnp.asarray(vals),
+                                      block=block, use_pallas=False)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_sorted_segment_sum_matches_numpy():
+    rng = np.random.default_rng(7)
+    m = 256
+    keys = np.sort(rng.integers(0, 17, m)).astype(np.int32)
+    vals = rng.standard_normal(m).astype(np.float32)
+    sums, _ = ss_ops.sorted_segment_sum(jnp.asarray(keys), jnp.asarray(vals),
+                                        use_pallas=True)
+    expect = np.zeros(17)
+    np.add.at(expect, keys, vals)
+    got = np.zeros(17)
+    # kernel returns per-run sums aligned to run starts
+    starts = np.concatenate([[True], keys[1:] != keys[:-1]])
+    got[keys[starts]] = np.asarray(sums)[starts]
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rows,width", [(8, 8), (32, 64), (65, 16)])
+@pytest.mark.parametrize("singleton_rule", [True, False])
+def test_delta_q_matches_ref(rows, width, singleton_rule):
+    rng = np.random.default_rng(rows + width)
+    n_com = 9
+    sentinel = 997
+    cand = rng.integers(0, n_com, (rows, width)).astype(np.int32)
+    pad = rng.random((rows, width)) < 0.15
+    cand = np.where(pad, sentinel, cand)
+    nbr_w = np.where(pad, 0.0, rng.random((rows, width))).astype(np.float32)
+    cur = rng.integers(0, n_com, (rows,)).astype(np.int32)
+    deg = rng.random(rows).astype(np.float32) + 0.1
+    volc = rng.random((rows, width)).astype(np.float32) * 5
+    volcur = rng.random(rows).astype(np.float32) * 5
+    szc = rng.integers(1, 5, (rows, width)).astype(np.int32)
+    szcur = rng.integers(1, 5, rows).astype(np.int32)
+    volv = jnp.float32(37.0)
+    args = (jnp.asarray(cand), jnp.asarray(nbr_w), jnp.asarray(cur),
+            jnp.asarray(deg), jnp.asarray(volc), jnp.asarray(volcur),
+            jnp.asarray(szc), jnp.asarray(szcur), volv)
+    kw = dict(sentinel=sentinel, singleton_rule=singleton_rule)
+    out_p = dq_ops.delta_q_argmax(*args, use_pallas=True, **kw)
+    out_r = dq_ops.delta_q_argmax(*args, use_pallas=False, **kw)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_kernels_under_jit():
+    """Kernels must compose with jit (static shapes, no host callbacks)."""
+    rng = np.random.default_rng(0)
+    nbr_lab = jnp.asarray(rng.integers(0, 5, (16, 8)), jnp.int32)
+    w = jnp.asarray(rng.random((16, 8)), jnp.float32)
+    cur = jnp.asarray(rng.integers(0, 5, (16,)), jnp.int32)
+    rows = jnp.arange(16, dtype=jnp.int32)
+
+    @jax.jit
+    def f(nl, ww, cc, rr):
+        return la_ops.label_argmax(nl, ww, cc, rr, jnp.uint32(0),
+                                   tie_eps=0.1, sentinel=100, use_pallas=True)
+
+    out = f(nbr_lab, w, cur, rows)
+    assert out[0].shape == (16,)
+
+
+# ---------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("b,hq,hk,sq,sk,d,bq,bk,causal", [
+    (2, 4, 2, 64, 64, 16, 16, 16, True),
+    (1, 8, 8, 128, 128, 32, 32, 64, True),
+    (2, 4, 1, 64, 128, 16, 32, 32, False),
+    (1, 2, 2, 256, 256, 64, 128, 128, True),
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention_matches_ref(b, hq, hk, sq, sk, d, bq, bk, causal, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    rng = np.random.default_rng(b * sq + sk)
+    dt = jnp.float32 if dtype == "float32" else jnp.bfloat16
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), dt)
+    k = jnp.asarray(rng.standard_normal((b, hk, sk, d)), dt)
+    v = jnp.asarray(rng.standard_normal((b, hk, sk, d)), dt)
+    out_p = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                            use_pallas=True)
+    out_r = flash_attention(q, k, v, causal=causal, use_pallas=False)
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(np.asarray(out_p, np.float32),
+                               np.asarray(out_r, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_model_path():
+    """The kernel oracle must agree with models/attention.full_attention."""
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.attention import full_attention
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((2, 4, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 32, 16)), jnp.float32)
+    from repro.models.attention import repeat_kv
+    out_m = full_attention(q, repeat_kv(k, 2), repeat_kv(v, 2), causal=True)
+    out_k = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_k),
+                               atol=2e-5, rtol=2e-5)

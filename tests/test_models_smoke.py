@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED config of the same
+family — one forward/train step on CPU asserting output shapes + no NaNs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import api as model_api
+from repro.models.common import init_params
+
+
+def _batch(c, rng, B=2, S=16):
+    toks = jnp.asarray(rng.integers(0, c.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    kw = {}
+    if c.family == "vlm":
+        e = jnp.asarray(rng.normal(size=(B, c.n_img_tokens, c.d_model)),
+                        jnp.bfloat16)
+        batch["img_embeds"] = kw["img_embeds"] = e
+    if c.family == "audio":
+        e = jnp.asarray(rng.normal(size=(B, c.n_frames, c.d_model)), jnp.bfloat16)
+        batch["enc_embeds"] = kw["enc_embeds"] = e
+    return batch, kw
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_decode(arch, rng):
+    c = configs.get(arch, reduced=True)
+    m = model_api.build(c)
+    params = init_params(m.decls, seed=0)
+    B, S = 2, 16
+    batch, kw = _batch(c, rng, B, S)
+    logits = m.prefill_fn(params, batch)
+    assert logits.shape == (B, S, c.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    loss, metrics = m.loss_fn(params, batch)
+    assert np.isfinite(float(loss))
+    st = m.init_decode_state(params, B, 32, **kw)
+    dl, st2 = m.decode_fn(params, batch["tokens"][:, 0], st)
+    assert dl.shape == (B, c.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(dl.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    """One real optimizer step on the reduced config; loss finite, params move."""
+    from repro.launch.train import build_trainer
+    from repro.models.arch_config import ShapeCell
+    c = configs.get(arch, reduced=True)
+    cell = ShapeCell("t", "train", 16, 2)
+    model, step, init_fn = build_trainer(c, cell)
+    params, opt = init_fn(0)
+    batch, _ = _batch(c, rng, 2, 16)
+    p0 = np.asarray(jax.device_get(jax.tree.leaves(params)[0])).copy()
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    p1 = np.asarray(jax.device_get(jax.tree.leaves(params2)[0]))
+    assert not np.allclose(p0.astype(np.float32), p1.astype(np.float32))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "qwen3-moe-30b-a3b", "rwkv6-1.6b",
+                                  "zamba2-1.2b"])
+def test_decode_matches_prefill(arch, rng):
+    """Greedy next-token from decode path == argmax of prefill logits."""
+    c = configs.get(arch, reduced=True)
+    m = model_api.build(c)
+    params = init_params(m.decls, seed=1)
+    B, S = 2, 8
+    batch, kw = _batch(c, rng, B, S)
+    logits = m.prefill_fn(params, batch)
+    st = m.init_decode_state(params, B, 16, **kw)
+    dl = None
+    for t in range(S):
+        dl, st = m.decode_fn(params, batch["tokens"][:, t], st)
+    a = np.asarray(jnp.argmax(logits[:, -1], -1))
+    b = np.asarray(jnp.argmax(dl, -1))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_exact_config_dims():
+    """The full configs carry the exact assigned dims (spot checks)."""
+    c = configs.get("qwen3-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (36, 4096, 32, 8, 12288, 151936)
+    assert c.qk_norm
+    c = configs.get("nemotron-4-340b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == (
+        96, 18432, 96, 73728, 256000)
+    assert c.activation == "squared_relu"
+    c = configs.get("qwen3-moe-30b-a3b")
+    assert (c.n_experts, c.top_k, c.d_ff_expert) == (128, 8, 768)
+    c = configs.get("zamba2-1.2b")
+    assert (c.n_layers, c.ssm_state) == (38, 64)
+    c = configs.get("whisper-large-v3")
+    assert (c.n_enc_layers, c.n_layers, c.d_model, c.vocab_size) == (
+        32, 32, 1280, 51866)
+
+
+def test_param_counts_near_published():
+    expect = {"qwen3-8b": 8.2e9, "nemotron-4-340b": 340e9,
+              "llama4-maverick-400b-a17b": 400e9, "qwen3-moe-30b-a3b": 30.5e9,
+              "rwkv6-1.6b": 1.6e9, "zamba2-1.2b": 1.2e9,
+              "whisper-large-v3": 1.55e9}
+    for a, n_exp in expect.items():
+        c = configs.get(a)
+        n = c.total_params()
+        assert abs(n - n_exp) / n_exp < 0.12, (a, n, n_exp)
+
+
+def test_moe_active_params():
+    c = configs.get("llama4-maverick-400b-a17b")
+    assert abs(c.active_params() - 17e9) / 17e9 < 0.15
+    c = configs.get("qwen3-moe-30b-a3b")
+    assert abs(c.active_params() - 3.3e9) / 3.3e9 < 0.15

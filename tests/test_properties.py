@@ -1,0 +1,176 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import coarsen_graph, remap_communities
+from repro.core.modularity import modularity
+from repro.graph import segment as seg
+from repro.graph.builders import from_numpy_edges
+from repro.train import optim
+
+# --- strategies ------------------------------------------------------------
+
+
+@st.composite
+def small_graphs(draw):
+    n = draw(st.integers(4, 24))
+    m = draw(st.integers(n, 4 * n))
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    if u.size == 0:
+        u, v = np.array([0]), np.array([1 % n])
+    w = rng.random(u.size).astype(np.float32) + 0.1
+    return from_numpy_edges(u, v, w)
+
+
+@st.composite
+def partitions(draw, g):
+    n = g.n_max
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    k = draw(st.integers(1, max(1, int(g.n_valid))))
+    return jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+
+
+# --- modularity invariants ---------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_modularity_bounds(data):
+    g = data.draw(small_graphs())
+    com = data.draw(partitions(g))
+    q = float(modularity(g, com))
+    assert -0.5 - 1e-5 <= q <= 1.0 + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_modularity_label_permutation_invariant(data):
+    g = data.draw(small_graphs())
+    com = np.asarray(data.draw(partitions(g)))
+    perm = np.random.default_rng(0).permutation(int(com.max()) + 1)
+    q1 = float(modularity(g, jnp.asarray(com)))
+    q2 = float(modularity(g, jnp.asarray(perm[com].astype(np.int32))))
+    assert abs(q1 - q2) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_coarsening_preserves_volume_and_modularity(data):
+    """Aggregation (paper §III-B2) must preserve total volume exactly and the
+    modularity of the induced partition."""
+    g = data.draw(small_graphs())
+    com = data.draw(partitions(g))
+    new_com, n_comm = remap_communities(com, g.vertex_mask())
+    q_fine = float(modularity(g, new_com))
+    cg = coarsen_graph(g, new_com, n_comm)
+    assert abs(float(cg.total_volume()) - float(g.total_volume())) < 1e-3
+    ident = jnp.arange(cg.n_max, dtype=jnp.int32)
+    q_coarse = float(modularity(cg, ident))
+    assert abs(q_fine - q_coarse) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_remap_is_contiguous_bijection(data):
+    g = data.draw(small_graphs())
+    com = np.asarray(data.draw(partitions(g)))
+    new_com, n_comm = remap_communities(jnp.asarray(com), g.vertex_mask())
+    nv = int(g.n_valid)
+    nc = int(n_comm)
+    got = np.asarray(new_com)[:nv]
+    assert set(got) == set(range(nc))
+    # same old label -> same new label
+    for old in np.unique(com[:nv]):
+        idx = np.where(com[:nv] == old)[0]
+        assert len(set(got[idx])) == 1
+
+
+# --- groupby/segment primitives vs numpy ------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 12), st.integers(0, 2**16))
+def test_groupby_sum_matches_numpy(m, k, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, k, m).astype(np.int32)
+    vals = rng.standard_normal(m).astype(np.float32)
+    (gk,), gs, gvalid, n_groups = seg.groupby_sum((jnp.asarray(keys),),
+                                                  jnp.asarray(vals))
+    ng = int(n_groups)
+    got = {int(a): float(b) for a, b in zip(np.asarray(gk)[:ng],
+                                            np.asarray(gs)[:ng])}
+    expect = {}
+    for a, b in zip(keys, vals):
+        expect[int(a)] = expect.get(int(a), 0.0) + float(b)
+    assert set(got) == set(expect)
+    for kk in expect:
+        assert abs(got[kk] - expect[kk]) < 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 9), st.integers(0, 2**16))
+def test_segment_argmax_matches_numpy(m, nseg, seed):
+    rng = np.random.default_rng(seed)
+    segs = rng.integers(0, nseg, m).astype(np.int32)
+    scores = rng.standard_normal(m).astype(np.float32)
+    cands = rng.integers(0, 50, m).astype(np.int32)
+    best, cand = seg.segment_argmax(jnp.asarray(scores), jnp.asarray(cands),
+                                    jnp.asarray(segs), nseg)
+    for s in range(nseg):
+        idx = np.where(segs == s)[0]
+        if idx.size == 0:
+            assert int(cand[s]) == -1
+        else:
+            mx = scores[idx].max()
+            assert abs(float(best[s]) - mx) < 1e-6
+            winners = cands[idx[scores[idx] == mx]]
+            assert int(cand[s]) == winners.min()
+
+
+# --- optimizer invariants -----------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**16))
+def test_grad_clip_bounds_norm(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(5) * 100, jnp.float32)}
+    clipped, gn = optim.clip_by_global_norm(tree, 1.0)
+    assert float(optim.global_norm(clipped)) <= 1.0 + 1e-4
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**10))
+def test_adafactor_memory_is_factored(seed):
+    params = {"w": jnp.zeros((256, 512), jnp.bfloat16),
+              "small": jnp.zeros((4, 4), jnp.float32)}
+    state = optim.adafactor_init(params)
+    assert set(state.stats["w"]) == {"vr", "vc"}
+    assert state.stats["w"]["vr"].shape == (256,)
+    assert state.stats["w"]["vc"].shape == (512,)
+    assert set(state.stats["small"]) == {"v"}   # too small to factor
+
+
+# --- data pipeline determinism ------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 2**10))
+def test_data_pipeline_deterministic(step, seed):
+    from repro.models.arch_config import ShapeCell
+    from repro import configs
+    from repro.train.data import DataConfig, make_batch
+    c = configs.get("qwen3-1.7b", reduced=True)
+    cell = ShapeCell("t", "train", 32, 2)
+    b1 = make_batch(c, cell, step, DataConfig(seed=seed))
+    b2 = make_batch(c, cell, step, DataConfig(seed=seed))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].max() < c.vocab_size
+    assert b1["tokens"].min() >= 0
