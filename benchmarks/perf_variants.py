@@ -3,11 +3,15 @@ three roofline terms — the measurement half of the hypothesis loop.
 
   PYTHONPATH=src python -m benchmarks.perf_variants qwen3-8b decode_32k \
       kv_cache_dtype=int8 serve_bf16=1
-"""
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
+Community-detection sweep mode (DESIGN.md §Engine): time the fused
+while_loop phase against the stepwise per-sweep-dispatch reference —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants community com-dblp \
+      algo=plp repeat=3
+"""
 import json
+import os
 import sys
 
 import jax
@@ -15,6 +19,11 @@ import jax.numpy as jnp
 
 
 def run(arch: str, shape: str, overrides: dict, serve_bf16: bool = False):
+    # The production-mesh lowering needs 512 fake host devices; set the flag
+    # here (before first backend init) rather than at import so that
+    # `community` mode — which measures single-device dispatch overhead —
+    # runs under the normal runtime.
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
     from repro import configs
     from repro.models import api as model_api
     from repro.models.arch_config import SHAPES
@@ -71,7 +80,62 @@ def run(arch: str, shape: str, overrides: dict, serve_bf16: bool = False):
     return out
 
 
+def run_community(dataset: str = "com-dblp", algo: str = "both",
+                  repeat: int = 3, backend: str = "segment"):
+    """Fused vs stepwise sweep timings for the community-detection engine.
+
+    ``fused`` runs each local-moving phase as one jitted lax.while_loop call;
+    ``stepwise`` dispatches one jitted call + one ΔN host sync per sweep.
+    Labels are bit-identical between the two (tests/test_engine.py); the
+    delta is pure dispatch/transfer overhead.
+    """
+    import time
+
+    from repro.core.louvain import LouvainConfig, louvain
+    from repro.core.plp import PLPConfig, plp
+    from repro.graph import datasets
+
+    lg = datasets.load(dataset)
+    g = lg.graph
+    out = {"mode": "community", "dataset": dataset, "V": lg.n,
+           "E": lg.m_undirected, "backend": backend}
+
+    def best_of(fn):
+        fn()  # warm: compile both paths before timing
+        t_best = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn()
+            dt = time.perf_counter() - t0
+            t_best = dt if t_best is None else min(t_best, dt)
+        return t_best
+
+    if algo in ("plp", "both"):
+        cfg = PLPConfig(max_iterations=60, backend=backend)
+        out["plp_fused_s"] = best_of(lambda: plp(g, cfg.replace(fused=True)))
+        out["plp_stepwise_s"] = best_of(lambda: plp(g, cfg.replace(fused=False)))
+        out["plp_fused_speedup"] = out["plp_stepwise_s"] / out["plp_fused_s"]
+    if algo in ("louvain", "both"):
+        cfg = LouvainConfig(track_modularity=False, backend=backend)
+        out["louvain_fused_s"] = best_of(
+            lambda: louvain(g, cfg.replace(fused=True)))
+        out["louvain_stepwise_s"] = best_of(
+            lambda: louvain(g, cfg.replace(fused=False)))
+        out["louvain_fused_speedup"] = (
+            out["louvain_stepwise_s"] / out["louvain_fused_s"])
+    print(json.dumps(out, indent=1))
+    return out
+
+
 def main():
+    if sys.argv[1] == "community":
+        dataset = sys.argv[2] if len(sys.argv) > 2 else "com-dblp"
+        kw = {}
+        for tok in sys.argv[3:]:
+            k, v = tok.split("=", 1)
+            kw[k] = int(v) if k == "repeat" else v
+        run_community(dataset, **kw)
+        return
     arch, shape = sys.argv[1], sys.argv[2]
     overrides = {}
     serve_bf16 = False

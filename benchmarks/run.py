@@ -6,6 +6,7 @@
   fig3    — Louvain modularity parity across implementations
   fig4    — strong scaling of parallel Louvain over device counts,
             with the paper's phase breakdown (local-moving vs aggregation)
+  sweep_fusion — fused (one while_loop/level) vs stepwise engine timings
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -190,6 +191,27 @@ def bench_fig4_strong_scaling(device_counts=(1, 2, 4, 8)):
     return rows
 
 
+# ------------------------------------------------------------------ sweep fusion
+
+
+def bench_sweep_fusion(datasets=("com-amazon", "com-dblp")):
+    """Fused (one while_loop per level) vs stepwise (per-sweep dispatch)
+    engine timings — the measurement for DESIGN.md §Engine."""
+    from benchmarks.perf_variants import run_community
+    rows = []
+    for name in datasets:
+        rec = run_community(name, algo="both", repeat=2)
+        rows.append(rec)
+        print(f"[fusion] {name:18s} "
+              f"plp {rec['plp_stepwise_s']:.3f}s -> {rec['plp_fused_s']:.3f}s "
+              f"({rec['plp_fused_speedup']:.2f}x)  "
+              f"louvain {rec['louvain_stepwise_s']:.3f}s -> "
+              f"{rec['louvain_fused_s']:.3f}s "
+              f"({rec['louvain_fused_speedup']:.2f}x)")
+    _save("sweep_fusion", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -206,6 +228,7 @@ ALL = {
     "fig1": bench_fig1_lpa,
     "fig2_fig3": bench_fig2_fig3_louvain,
     "fig4": bench_fig4_strong_scaling,
+    "sweep_fusion": bench_sweep_fusion,
     "roofline": bench_roofline,
 }
 

@@ -4,14 +4,20 @@
 * ``louvain``  — Parallel Louvain: local-moving (Alg. 2) + aggregation (Alg. 3)
 * ``modularity`` — §II-C metric + Eq. 1 move gain
 * ``baselines`` — sequential/NetworkX comparison tier (paper §V)
+* ``engine``   — unified device-resident sweep engine (DESIGN.md §Engine)
 * ``distributed`` — shard_map multi-device variants (DESIGN.md §6)
 """
+from repro.core.engine import EngineSpec, PhaseResult, SweepEngine
 from repro.core.plp import PLPConfig, PLPResult, plp
-from repro.core.louvain import LouvainConfig, LouvainResult, louvain
+from repro.core.louvain import LouvainConfig, LouvainResult, louvain, leiden
 from repro.core.modularity import modularity, community_volumes, delta_q_from_score
 from repro.core import aggregation, baselines
 
 __all__ = [
+    "EngineSpec",
+    "PhaseResult",
+    "SweepEngine",
+    "leiden",
     "PLPConfig",
     "PLPResult",
     "plp",

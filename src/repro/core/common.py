@@ -34,6 +34,28 @@ def tie_noise(a: jax.Array, b: jax.Array, seed: jax.Array, eps: float) -> jax.Ar
     return h.astype(jnp.float32) * jnp.float32(eps / 4294967296.0)
 
 
+def luby_move_gate(
+    n: int,
+    sweep_key: jax.Array,
+    seed: jax.Array,
+    move_prob: float,
+    mult: int,
+    salt: int,
+) -> jax.Array:
+    """bool[n]: Luby-style per-vertex move coin for one synchronous sweep.
+
+    Emulates the paper's asynchronous move order (DESIGN.md §2): moving a
+    random ``move_prob`` fraction of intenders per sweep breaks synchronous
+    two-cycles.  ``mult``/``salt`` are per-evaluator stream constants so PLP
+    and Louvain draw from decorrelated coin sequences.
+    """
+    coin = hash_u32(
+        jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(mult)
+        ^ hash_u32(sweep_key.astype(jnp.uint32) + seed.astype(jnp.uint32) * jnp.uint32(salt))
+    )
+    return coin < jnp.uint32(int(move_prob * 4294967295.0))
+
+
 def neighbor_or_self_changed(g: Graph, changed: jax.Array) -> jax.Array:
     """Active-set propagation (Alg. 1 l.25 / Alg. 2 l.21): a vertex needs
     re-checking iff it changed or any neighbor changed."""

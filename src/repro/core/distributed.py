@@ -10,6 +10,13 @@ Decomposition — the TPU analogue of Chapel multi-locale block distribution:
   * O(n) derived state (community volumes/sizes) is recomputed redundantly on
     every device from replicated inputs — compute is cheaper than ICI.
 
+The sweep loop itself is the shared engine's fused phase
+(``core.engine.make_distributed_phase``, DESIGN.md §Engine): the
+``lax.while_loop`` runs INSIDE the shard_map worker with the convergence
+predicate on the replicated ΔN, so one local-moving phase is one jitted call
+with zero per-sweep host syncs — the same contract as the single-device
+backends.
+
 Matching the paper's own observation (§V-B: "the aggregation phase exhibits
 limited scalability due to its global communication requirements"), Louvain
 aggregation is executed as a global re-shuffle: gather the moved communities,
@@ -21,16 +28,15 @@ The same code runs 8 fake CPU devices (tests) or a 512-chip pod mesh
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import aggregation, moves
-from repro.core.common import hash_u32
+from repro.core import aggregation
+from repro.core.engine import EngineSpec, make_distributed_phase
 from repro.core.modularity import modularity
 from repro.graph.partition import EdgePartition, partition_edges_by_dst
 from repro.graph.structure import Graph
@@ -52,54 +58,7 @@ def shard_edges(p: EdgePartition, mesh: Mesh):
     return dev(p.src), dev(p.dst), dev(p.w), dev(p.edge_mask)
 
 
-def _merge_owner_updates(upd: jax.Array, val: jax.Array, base: jax.Array, axes):
-    """Disjoint-owner merge: psum the masked updates into the replicated base."""
-    contrib = jnp.where(upd, val, jnp.zeros((), val.dtype))
-    total = jax.lax.psum(contrib, axes)
-    any_upd = jax.lax.psum(upd.astype(jnp.int32), axes) > 0
-    return jnp.where(any_upd, total, base), any_upd
-
-
 # ----------------------------------------------------------------- PLP
-
-
-def make_plp_sweep(mesh: Mesh, n: int, tie_eps: float = 0.25, move_prob: float = 0.75):
-    """Build the jitted distributed PLP sweep for a fixed mesh/size."""
-    axes = _flat_axes(mesh)
-    espec = P(axes)        # edge shards
-    rspec = P()            # replicated
-
-    def worker(src, dst, w, emask, labels, active, it, seed):
-        src, dst, w, emask = src[0], dst[0], w[0], emask[0]
-        valid = emask & active[jnp.clip(dst, 0, n - 1)]
-        best_score, best_lab, cur_score = moves.plp_best_labels(
-            src, dst, w, valid, labels, n, it, seed, tie_eps
-        )
-        adopt = active & (best_lab >= 0) & (best_score > cur_score)
-        if move_prob < 1.0:
-            coin = hash_u32(
-                jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(0x85EBCA6B)
-                ^ hash_u32(it + seed * jnp.uint32(313))
-            )
-            adopt = adopt & (coin < jnp.uint32(int(move_prob * 4294967295.0)))
-        new_labels, any_upd = _merge_owner_updates(adopt, best_lab, labels, axes)
-        changed = any_upd & (new_labels != labels)
-        # frontier propagation needs local edges only, then a max-merge
-        contrib = jnp.where(emask, changed[jnp.clip(src, 0, n - 1)].astype(jnp.int32), 0)
-        nbr_local = jax.ops.segment_sum(contrib, jnp.clip(dst, 0, n - 1), num_segments=n)
-        nbr = jax.lax.psum(nbr_local, axes) > 0
-        next_active = changed | nbr
-        delta_n = jnp.sum(changed.astype(jnp.int32))
-        return new_labels, next_active, delta_n
-
-    sharded = jax.shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(espec, espec, espec, espec, rspec, rspec, rspec, rspec),
-        out_specs=(rspec, rspec, rspec),
-        check_vma=False,
-    )
-    return jax.jit(sharded)
 
 
 def distributed_plp(
@@ -111,70 +70,36 @@ def distributed_plp(
     tie_eps: float = 0.25,
     move_prob: float = 0.75,
 ):
-    """Driver: partition, then iterate the sharded sweep."""
+    """Driver: partition once, then one fused sharded phase call."""
     n = g.n_max
     part = partition_edges_by_dst(g, mesh.devices.size)
     src, dst, w, emask = shard_edges(part, mesh)
-    sweep = make_plp_sweep(mesh, n, tie_eps, move_prob)
+    spec = EngineSpec(
+        evaluator="plp",
+        backend="distributed",
+        max_sweeps=max_iterations,
+        threshold=threshold,
+        tie_eps=tie_eps,
+        move_prob=move_prob,
+        # historical behavior of the sharded sweep: tie noise re-drawn per
+        # iteration (the closest analogue of Chapel's racy move order)
+        reshuffle_ties=True,
+    )
+    phase = make_distributed_phase(mesh, n, spec)
 
     labels = jnp.arange(n, dtype=jnp.int32)
     active = g.vertex_mask()
-    history = []
-    for it in range(max_iterations):
-        labels, active, dn = sweep(
-            src, dst, w, emask, labels, active, jnp.uint32(it), jnp.uint32(seed)
-        )
-        dn = int(dn)
-        history.append(dn)
-        if dn <= threshold:
-            break
+    zero = jnp.zeros((n,), jnp.float32)  # deg/vol placeholders (PLP unused)
+    labels, active, sweeps, dn_hist, _ = phase(
+        src, dst, w, emask, labels, active, jnp.uint32(0), jnp.uint32(seed),
+        zero, jnp.float32(1.0), g.n_valid,
+    )
+    sweeps = int(sweeps)
+    history = [int(x) for x in np.asarray(dn_hist)[:sweeps]]
     return np.asarray(labels), history
 
 
 # ----------------------------------------------------------------- Louvain
-
-
-def make_louvain_sweep(mesh: Mesh, n: int, singleton_rule: bool = True, move_prob: float = 0.5):
-    axes = _flat_axes(mesh)
-    espec = P(axes)
-    rspec = P()
-
-    def worker(src, dst, w, emask, com, need, deg, vol_v, n_valid, it, seed):
-        src, dst, w, emask = src[0], dst[0], w[0], emask[0]
-        # replicated O(n) recompute (identical on all devices, no comm)
-        com_c = jnp.clip(com, 0, n - 1)
-        vol_com = jax.ops.segment_sum(deg, com_c, num_segments=n)
-        vmask = jnp.arange(n, dtype=jnp.int32) < n_valid
-        size_com = jax.ops.segment_sum(
-            jnp.where(vmask, 1, 0), com_c, num_segments=n
-        )
-        valid = emask & need[jnp.clip(dst, 0, n - 1)]
-        best_gain, best_cand = moves.louvain_best_moves(
-            src, dst, w, valid, com, deg, vol_com, size_com, vol_v, n,
-            singleton_rule=singleton_rule,
-        )
-        move = need & (best_cand >= 0) & (best_gain > 0.0)
-        if move_prob < 1.0:
-            coin = hash_u32(
-                jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(0x9E3779B1)
-                ^ hash_u32(it + seed * jnp.uint32(101))
-            )
-            move = move & (coin < jnp.uint32(int(move_prob * 4294967295.0)))
-        new_com, any_upd = _merge_owner_updates(move, best_cand, com, axes)
-        changed = any_upd & (new_com != com)
-        contrib = jnp.where(emask, changed[jnp.clip(src, 0, n - 1)].astype(jnp.int32), 0)
-        nbr_local = jax.ops.segment_sum(contrib, jnp.clip(dst, 0, n - 1), num_segments=n)
-        nbr = jax.lax.psum(nbr_local, axes) > 0
-        return new_com, changed | nbr, jnp.sum(changed.astype(jnp.int32))
-
-    sharded = jax.shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(espec,) * 4 + (rspec,) * 7,
-        out_specs=(rspec, rspec, rspec),
-        check_vma=False,
-    )
-    return jax.jit(sharded)
 
 
 @dataclasses.dataclass
@@ -203,24 +128,28 @@ def distributed_louvain(
     cur = g
     levels = 0
 
-    sweep = make_louvain_sweep(mesh, n, singleton_rule, move_prob)
+    spec = EngineSpec(
+        evaluator="louvain",
+        backend="distributed",
+        max_sweeps=max_sweeps,
+        threshold=sweep_threshold,
+        move_prob=move_prob,
+        singleton_rule=singleton_rule,
+    )
+    phase = make_distributed_phase(mesh, n, spec)
     for level in range(max_levels):
         with timer.phase("partition"):
             part = partition_edges_by_dst(cur, mesh.devices.size)
             src, dst, w, emask = shard_edges(part, mesh)
         com = jnp.arange(n, dtype=jnp.int32)
         need = cur.vertex_mask()
-        deg = cur.weighted_degrees()
-        vol_v = cur.total_volume()
-        for s in range(max_sweeps):
-            with timer.phase("local_moving"):
-                com, need, dn = sweep(
-                    src, dst, w, emask, com, need, deg, vol_v, cur.n_valid,
-                    jnp.uint32(level * 1000 + s), jnp.uint32(seed),
-                )
-                dn = int(dn)
-            if dn <= sweep_threshold:
-                break
+        with timer.phase("local_moving"):
+            # one fused phase per level: while_loop inside the shard_map
+            com, need, _, _, _ = phase(
+                src, dst, w, emask, com, need,
+                jnp.uint32(level * 1000), jnp.uint32(seed),
+                cur.weighted_degrees(), cur.total_volume(), cur.n_valid,
+            )
         with timer.phase("aggregation"):
             new_com, n_comm = aggregation.remap_communities(com, cur.vertex_mask())
             done = int(n_comm) == int(cur.n_valid)

@@ -1,0 +1,488 @@
+"""Unified device-resident sweep engine (DESIGN.md §Engine).
+
+One abstraction replaces the six near-identical local-moving sweeps that used
+to live in ``core/plp.py``, ``core/louvain.py`` and ``core/distributed.py``:
+
+  evaluator  ×  backend
+  ---------     -------
+  ``plp``       ``segment``      sort + segment GroupBy over the edge list
+  ``louvain``   ``ell``          degree-bucketed dense tiles (jnp oracle)
+                ``pallas``       same tiles through the Pallas kernels
+                ``distributed``  shard_map over edge-partitioned shards
+
+An evaluator proposes moves — ``(proposal[n], propose[n])`` per vertex — and
+the engine owns everything around it: the Luby move-probability coin, the
+adopt/changed bookkeeping, ΔN accounting, and active-frontier propagation.
+
+The per-level sweep loop is a ``jax.lax.while_loop`` with on-device
+``ΔN ≤ threshold`` convergence, so an entire local-moving phase (all sweeps of
+one level) is ONE jitted call: no per-sweep host round-trip, no per-sweep
+dispatch.  Per-sweep ΔN / active-count histories are written into fixed-size
+on-device buffers and read back once per phase.  Label/frontier buffers are
+donated to the fused call on accelerator backends.
+
+``fused=False`` drives the SAME step function from a Python loop (one jitted
+call per sweep) — the stepwise reference used by the parity tests and the
+``benchmarks`` fused-vs-stepwise comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ConfigBase
+from repro.core import moves
+from repro.core.common import luby_move_gate, neighbor_or_self_changed
+from repro.graph.structure import Graph
+
+# Per-evaluator Luby coin stream constants (kept distinct so PLP and Louvain
+# draw decorrelated move coins; values match the original sweep code).
+_GATE_CONST = {"plp": (0x85EBCA6B, 313), "louvain": (0x9E3779B1, 101)}
+
+EVALUATORS = ("plp", "louvain")
+BACKENDS = ("segment", "ell", "pallas", "distributed")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec(ConfigBase):
+    """Static (hashable) sweep configuration — the jit cache key.
+
+    ``threshold``/``max_sweeps`` define the fused convergence contract: the
+    loop runs while ``sweep < max_sweeps and ΔN > threshold``, evaluated
+    on device.
+    """
+
+    evaluator: str = "plp"       # plp | louvain
+    backend: str = "segment"     # segment | ell | pallas | distributed
+    max_sweeps: int = 100
+    threshold: int = 0           # paper's ΔN threshold θ
+    tie_eps: float = 0.25        # PLP tie noise amplitude
+    move_prob: float = 1.0       # Luby move gate (1.0 = pure Jacobi)
+    use_frontier: bool = True    # paper's active-vertex optimization
+    reshuffle_ties: bool = False # PLP: re-draw tie noise each sweep
+    singleton_rule: bool = True  # Louvain: Lu et al. swap suppression
+
+    def __post_init__(self):
+        if self.evaluator not in EVALUATORS:
+            raise ValueError(f"unknown evaluator {self.evaluator!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+
+@dataclasses.dataclass
+class PhaseResult:
+    """Result of one local-moving phase (all sweeps of one level)."""
+
+    labels: jax.Array            # device-resident — no forced host copy
+    active: jax.Array
+    sweeps: int
+    delta_n_history: list
+    active_history: list
+
+
+# ----------------------------------------------------------------- evaluators
+
+
+def _evaluate_segment(spec: EngineSpec, g: Graph, labels, active, it, seed,
+                      restrict):
+    """Sort+segment evaluator over the full (single-device) edge list."""
+    n = g.n_max
+    valid = g.edge_mask & active[jnp.clip(g.dst, 0, n - 1)]
+    if spec.evaluator == "plp":
+        noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
+        best_score, best_lab, cur_score = moves.plp_best_labels(
+            g.src, g.dst, g.w, valid, labels, n, noise_it, seed, spec.tie_eps
+        )
+        propose = active & (best_lab >= 0) & (best_score > cur_score)
+        return best_lab, propose
+
+    vmask = g.vertex_mask()
+    deg = g.weighted_degrees()              # loop-invariant: hoisted by XLA
+    vol_v = g.total_volume()
+    vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+    if restrict is not None:
+        # Leiden refinement: moves never leave the enclosing macro community
+        same_macro = (restrict[jnp.clip(g.src, 0, n - 1)]
+                      == restrict[jnp.clip(g.dst, 0, n - 1)])
+        valid = valid & same_macro
+    best_gain, best_cand = moves.louvain_best_moves(
+        g.src, g.dst, g.w, valid, labels, deg, vol_com, size_com, vol_v, n,
+        singleton_rule=spec.singleton_rule,
+    )
+    propose = vmask & active & (best_cand >= 0) & (best_gain > 0.0)
+    return best_cand, propose
+
+
+def _scan_propose(ell, active, n: int, eval_chunk):
+    """Shared ELL chunk plumbing: lax.scan ``eval_chunk(rows, nbr, w) ->
+    (best[Rc], good[Rc])`` over every bucket chunk, scattering per-row
+    proposals into per-vertex arrays.  Slot n is the write sink for padding /
+    non-proposing rows, so real rows (unique across buckets) never collide."""
+    proposal_ext = jnp.full((n + 1,), -1, jnp.int32)
+    propose_ext = jnp.zeros((n + 1,), bool)
+
+    def chunk_body(carry, chunk):
+        proposal_ext, propose_ext = carry
+        rows, nbr, w = chunk
+        best, good = eval_chunk(rows, nbr, w)
+        row_ok = (rows < n) & active[jnp.clip(rows, 0, n - 1)]
+        row_prop = row_ok & good
+        idx = jnp.where(row_prop, jnp.clip(rows, 0, n - 1), n)
+        proposal_ext = proposal_ext.at[idx].set(jnp.where(row_prop, best, -1))
+        propose_ext = propose_ext.at[idx].set(row_prop)
+        return proposal_ext, propose_ext
+
+    carry = (proposal_ext, propose_ext)
+    for b in ell.buckets:
+        carry, _ = jax.lax.scan(
+            lambda c, chunk: (chunk_body(c, chunk), None), carry,
+            (b.rows, b.nbr, b.w),
+        )
+    proposal_ext, propose_ext = carry
+    return proposal_ext[:n], propose_ext[:n]
+
+
+def _merge_tail(ell, active, n: int, proposal, propose, eval_tail):
+    """Merge high-degree-tail proposals from ``eval_tail(valid_edges) ->
+    (best[n], good[n])`` over the pre-extracted tail edge list."""
+    valid_t = ((ell.tail_src < n) & (ell.tail_dst < n)
+               & active[jnp.clip(ell.tail_dst, 0, n - 1)])
+    best, good = eval_tail(valid_t)
+    tail_prop = ell.is_tail & active & good
+    return jnp.where(tail_prop, best, proposal), propose | tail_prop
+
+
+def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
+                  use_pallas: bool):
+    """Degree-bucketed tile evaluator: lax.scan over stacked chunks, tail
+    vertices through the segment evaluator on pre-extracted tail edges."""
+    n = g.n_max
+
+    if spec.evaluator == "plp":
+        from repro.kernels.label_argmax import ops as la_ops
+
+        labels_ext = jnp.concatenate([labels, jnp.int32([n])])
+        noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
+        noise_seed = seed.astype(jnp.uint32) + noise_it
+
+        def eval_chunk(rows, nbr, w):
+            nbr_lab = labels_ext[jnp.clip(nbr, 0, n)]
+            nbr_lab = jnp.where(nbr < n, nbr_lab, n)
+            cur_lab = labels_ext[jnp.clip(rows, 0, n)]
+            best_lab, best_score, cur_score = la_ops.label_argmax(
+                nbr_lab, w, cur_lab, jnp.where(rows < n, rows, n), noise_seed,
+                tie_eps=spec.tie_eps, sentinel=n, use_pallas=use_pallas,
+            )
+            return best_lab, (best_lab >= 0) & (best_score > cur_score)
+
+        def eval_tail(valid_t):
+            best_score, best_lab, cur_score = moves.plp_best_labels(
+                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t, labels, n,
+                noise_it, seed, spec.tie_eps,
+            )
+            return best_lab, (best_lab >= 0) & (best_score > cur_score)
+
+    else:  # louvain
+        from repro.kernels.delta_q import ops as dq_ops
+
+        vmask = g.vertex_mask()
+        deg = g.weighted_degrees()
+        vol_v = g.total_volume()
+        vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+        com_ext = jnp.concatenate([labels, jnp.int32([n])])
+        vol_ext = jnp.concatenate([vol_com, jnp.zeros((1,), vol_com.dtype)])
+        size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
+        deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
+
+        def eval_chunk(rows, nbr, w):
+            rows_c = jnp.clip(rows, 0, n)
+            cand = jnp.where(nbr < n, com_ext[jnp.clip(nbr, 0, n)], n)
+            best_cand, best_gain = dq_ops.delta_q_argmax(
+                cand_com=cand,
+                nbr_w=w,
+                cur_com=com_ext[rows_c],
+                deg_v=deg_ext[rows_c],
+                vol_cand=vol_ext[jnp.clip(cand, 0, n)],
+                vol_cur=vol_ext[jnp.clip(com_ext[rows_c], 0, n)],
+                size_cand=size_ext[jnp.clip(cand, 0, n)],
+                size_cur=size_ext[jnp.clip(com_ext[rows_c], 0, n)],
+                vol_total=vol_v,
+                sentinel=n,
+                singleton_rule=spec.singleton_rule,
+                use_pallas=use_pallas,
+            )
+            return best_cand, (best_cand >= 0) & (best_gain > 0.0)
+
+        def eval_tail(valid_t):
+            best_gain, best_cand = moves.louvain_best_moves(
+                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t, labels, deg,
+                vol_com, size_com, vol_v, n,
+                singleton_rule=spec.singleton_rule,
+            )
+            return best_cand, vmask & (best_cand >= 0) & (best_gain > 0.0)
+
+    proposal, propose = _scan_propose(ell, active, n, eval_chunk)
+    if ell.has_tail:
+        proposal, propose = _merge_tail(
+            ell, active, n, proposal, propose, eval_tail)
+    return proposal, propose
+
+
+# ----------------------------------------------------------------- step / loop
+
+
+def _make_step(spec: EngineSpec, g: Graph, ell, restrict):
+    """Build the shared sweep step: evaluate → gate → adopt → frontier."""
+    n = g.n_max
+    mult, salt = _GATE_CONST[spec.evaluator]
+
+    def step(labels, active, it, seed):
+        if spec.backend == "segment":
+            proposal, propose = _evaluate_segment(
+                spec, g, labels, active, it, seed, restrict)
+        else:
+            proposal, propose = _evaluate_ell(
+                spec, g, ell, labels, active, it, seed,
+                use_pallas=(spec.backend == "pallas"))
+        adopt = propose
+        if spec.move_prob < 1.0:
+            adopt = adopt & luby_move_gate(n, it, seed, spec.move_prob, mult, salt)
+        new_labels = jnp.where(adopt, proposal, labels)
+        changed = adopt & (new_labels != labels)
+        delta_n = jnp.sum(changed.astype(jnp.int32))
+        if spec.use_frontier:
+            next_active = neighbor_or_self_changed(g, changed)
+        else:
+            next_active = g.vertex_mask()
+        return new_labels, next_active, delta_n
+
+    return step
+
+
+def _phase_loop(step, labels, active, it0, seed, max_sweeps: int, threshold: int):
+    """The fused convergence loop: run ``step`` until ΔN ≤ threshold or the
+    sweep budget is exhausted, entirely on device.  Returns
+    (labels, active, sweeps, dn_hist[max_sweeps], act_hist[max_sweeps])."""
+
+    def cond(carry):
+        s, dn, _, _, _, _ = carry
+        return (s < jnp.uint32(max_sweeps)) & (dn > jnp.int32(threshold))
+
+    def body(carry):
+        s, _, labels, active, dn_hist, act_hist = carry
+        labels, active, dn = step(labels, active, it0 + s, seed)
+        dn_hist = dn_hist.at[s].set(dn)
+        act_hist = act_hist.at[s].set(jnp.sum(active.astype(jnp.int32)))
+        return s + jnp.uint32(1), dn, labels, active, dn_hist, act_hist
+
+    init = (
+        jnp.uint32(0),
+        jnp.int32(threshold) + jnp.int32(1),
+        labels,
+        active,
+        jnp.full((max_sweeps,), -1, jnp.int32),
+        jnp.full((max_sweeps,), -1, jnp.int32),
+    )
+    s, _, labels, active, dn_hist, act_hist = jax.lax.while_loop(cond, body, init)
+    return labels, active, s, dn_hist, act_hist
+
+
+def _donate_labels() -> bool:
+    """Buffer donation for the label/frontier arrays in the fused call.
+
+    Skipped on CPU, where XLA does not implement donation (the warning would
+    drown test output); on TPU/GPU the phase reuses the input buffers."""
+    return jax.default_backend() != "cpu"
+
+
+@lru_cache(maxsize=None)
+def _fused_phase_fn(spec: EngineSpec, donate: bool):
+    def phase(g, ell, labels, active, it0, seed, restrict):
+        step = _make_step(spec, g, ell, restrict)
+        return _phase_loop(step, labels, active, it0, seed,
+                           spec.max_sweeps, spec.threshold)
+
+    return jax.jit(phase, donate_argnums=(2, 3) if donate else ())
+
+
+@lru_cache(maxsize=None)
+def _step_fn(spec: EngineSpec):
+    def one_sweep(g, ell, labels, active, it, seed, restrict):
+        return _make_step(spec, g, ell, restrict)(labels, active, it, seed)
+
+    return jax.jit(one_sweep)
+
+
+# ----------------------------------------------------------------- engine
+
+
+class SweepEngine:
+    """Local-moving sweep engine for one graph (one coarsening level).
+
+    >>> eng = SweepEngine(g, EngineSpec(evaluator="plp", max_sweeps=50))
+    >>> res = eng.run_phase(*eng.singleton_state(), seed=0)
+    """
+
+    def __init__(self, g: Graph, spec: EngineSpec, ell=None):
+        if spec.backend == "distributed":
+            raise ValueError(
+                "use make_distributed_phase() for the distributed backend")
+        self.g = g
+        self.spec = spec
+        self.ell = None
+        if spec.backend in ("ell", "pallas"):
+            from repro.graph import ell as ell_mod
+
+            if ell is None:
+                ell = ell_mod.build_device_ell(g)
+            elif isinstance(ell, ell_mod.EllGraph):
+                ell = ell_mod.to_device(g, ell)
+            self.ell = ell
+
+    def singleton_state(self) -> Tuple[jax.Array, jax.Array]:
+        """(labels, active): singleton init + full active set (Alg. 1 l.4-5)."""
+        return (jnp.arange(self.g.n_max, dtype=jnp.int32),
+                self.g.vertex_mask())
+
+    def run_phase(
+        self,
+        labels: jax.Array,
+        active: jax.Array,
+        *,
+        it0: int = 0,
+        seed: int = 0,
+        restrict: Optional[jax.Array] = None,
+        fused: bool = True,
+    ) -> PhaseResult:
+        """Run one local-moving phase to convergence.
+
+        fused=True:  ONE jitted lax.while_loop call; the only host transfer
+                     is reading back (sweeps, ΔN history, active history).
+        fused=False: stepwise reference — the same step function driven from
+                     Python, one jitted call + one ΔN transfer per sweep.
+        """
+        spec = self.spec
+        if restrict is not None and spec.backend != "segment":
+            raise ValueError(
+                "restrict (Leiden macro confinement) is only implemented for "
+                f"the segment backend, not {spec.backend!r}")
+        it0_a = jnp.uint32(it0)
+        seed_a = jnp.uint32(seed)
+        if fused:
+            phase = _fused_phase_fn(spec, _donate_labels())
+            labels, active, s, dn_hist, act_hist = phase(
+                self.g, self.ell, labels, active, it0_a, seed_a, restrict)
+            s, dn_hist, act_hist = jax.device_get((s, dn_hist, act_hist))
+            s = int(s)
+            return PhaseResult(labels, active, s,
+                               [int(x) for x in dn_hist[:s]],
+                               [int(x) for x in act_hist[:s]])
+
+        step = _step_fn(spec)
+        dn_hist, act_hist = [], []
+        s = 0
+        while s < spec.max_sweeps:
+            labels, active, dn = step(
+                self.g, self.ell, labels, active, it0_a + jnp.uint32(s),
+                seed_a, restrict)
+            dn = int(dn)
+            dn_hist.append(dn)
+            act_hist.append(int(jnp.sum(active.astype(jnp.int32))))
+            s += 1
+            if dn <= spec.threshold:
+                break
+        return PhaseResult(labels, active, s, dn_hist, act_hist)
+
+
+# ----------------------------------------------------------------- distributed
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (check_vma vs check_rep spelling)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def make_distributed_phase(mesh, n: int, spec: EngineSpec):
+    """Build the jitted fused phase for edge-partitioned shards.
+
+    The while_loop runs INSIDE the shard_map worker: small O(n) state is
+    replicated, each sweep psum-merges the disjoint per-owner proposals, and
+    the convergence predicate is evaluated on the replicated ΔN — identical
+    on every device, so the loop exits in lockstep with zero host syncs.
+
+    Returns ``phase(src, dst, w, emask, labels, active, it0, seed, deg,
+    vol_v, n_valid) -> (labels, active, sweeps, dn_hist, act_hist)``.
+    ``deg``/``vol_v`` are the per-level Louvain invariants (ignored by PLP).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    espec, rspec = P(axes), P()
+    mult, salt = _GATE_CONST[spec.evaluator]
+
+    def worker(src, dst, w, emask, labels, active, it0, seed, deg, vol_v,
+               n_valid):
+        src, dst, w, emask = src[0], dst[0], w[0], emask[0]
+        vmask = jnp.arange(n, dtype=jnp.int32) < n_valid
+
+        def evaluate(labels, active, it):
+            valid = emask & active[jnp.clip(dst, 0, n - 1)]
+            if spec.evaluator == "plp":
+                noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
+                best_score, best_lab, cur_score = moves.plp_best_labels(
+                    src, dst, w, valid, labels, n, noise_it, seed, spec.tie_eps)
+                propose_l = active & (best_lab >= 0) & (best_score > cur_score)
+                proposal_l = best_lab
+            else:
+                # replicated O(n) recompute — identical on all devices, no comm
+                vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+                best_gain, best_cand = moves.louvain_best_moves(
+                    src, dst, w, valid, labels, deg, vol_com, size_com, vol_v,
+                    n, singleton_rule=spec.singleton_rule)
+                propose_l = active & (best_cand >= 0) & (best_gain > 0.0)
+                proposal_l = best_cand
+            # disjoint-owner merge: every vertex's in-edges live on one device
+            merged = jax.lax.psum(
+                jnp.where(propose_l, proposal_l, 0).astype(jnp.int32), axes)
+            propose = jax.lax.psum(propose_l.astype(jnp.int32), axes) > 0
+            return jnp.where(propose, merged, -1), propose
+
+        def frontier(changed):
+            contrib = jnp.where(
+                emask, changed[jnp.clip(src, 0, n - 1)].astype(jnp.int32), 0)
+            nbr_local = jax.ops.segment_sum(
+                contrib, jnp.clip(dst, 0, n - 1), num_segments=n)
+            return changed | (jax.lax.psum(nbr_local, axes) > 0)
+
+        def step(labels, active, it, seed):
+            proposal, propose = evaluate(labels, active, it)
+            adopt = propose
+            if spec.move_prob < 1.0:
+                adopt = adopt & luby_move_gate(
+                    n, it, seed, spec.move_prob, mult, salt)
+            new_labels = jnp.where(adopt, proposal, labels)
+            changed = adopt & (new_labels != labels)
+            delta_n = jnp.sum(changed.astype(jnp.int32))
+            next_active = frontier(changed) if spec.use_frontier else vmask
+            return new_labels, next_active, delta_n
+
+        return _phase_loop(step, labels, active, it0, seed,
+                           spec.max_sweeps, spec.threshold)
+
+    sharded = shard_map_compat(
+        worker, mesh,
+        in_specs=(espec,) * 4 + (rspec,) * 7,
+        out_specs=(rspec,) * 5,
+    )
+    return jax.jit(sharded)

@@ -10,14 +10,18 @@ Faithful structure:
 
 Adaptations (DESIGN.md §2 / §8): atomic volCom updates (l.18-19) become a
 segment-sum recompute at each synchronous sweep; the Lu–Halappanavar singleton
-tie-break suppresses the classic PLM two-singleton swap oscillation.  Move
-backends: ``segment`` (sort+segment GroupBy) and ``ell``/``pallas``
-(degree-bucketed dense tiles through ``kernels/delta_q``).
+tie-break suppresses the classic PLM two-singleton swap oscillation.
+
+The sweep machinery lives in the shared ``core.engine`` (DESIGN.md §Engine):
+this module configures the ``louvain`` evaluator, runs one fused local-moving
+phase per level (a single jitted ``lax.while_loop`` call with on-device
+ΔN ≤ threshold convergence — at most one host transfer per level), and owns
+the level loop: aggregation, optional Leiden-style refinement, bookkeeping.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -26,9 +30,8 @@ import numpy as np
 
 from repro.config import ConfigBase
 from repro.core import aggregation
-from repro.core.common import neighbor_or_self_changed
+from repro.core.engine import EngineSpec, SweepEngine
 from repro.core.modularity import modularity
-from repro.graph import segment as seg
 from repro.graph.structure import Graph
 from repro.utils.timing import Timer
 
@@ -44,6 +47,7 @@ class LouvainConfig(ConfigBase):
     move_prob: float = 0.5      # Luby-style move gating (1.0 = pure Jacobi)
     seed: int = 0
     track_modularity: bool = True
+    fused: bool = True          # one while_loop per level vs per-sweep dispatch
     # Leiden-style refinement (beyond paper; the paper cites Leiden [30] as
     # the natural next algorithm): refine each community into well-connected
     # sub-communities before aggregation, then seed the next level with the
@@ -63,141 +67,17 @@ class LouvainResult:
     timer: Timer
 
 
-# ------------------------------------------------------------ local moving
-
-
-@partial(jax.jit, static_argnames=("singleton_rule", "move_prob"))
-def _louvain_sweep_segment(
-    g: Graph,
-    com: jax.Array,
-    need: jax.Array,
-    it: jax.Array = jnp.uint32(0),
-    seed: jax.Array = jnp.uint32(0),
-    singleton_rule: bool = True,
-    move_prob: float = 1.0,
-    restrict: Optional[jax.Array] = None,
-):
-    """One synchronous local-moving sweep (Alg. 2 l.10-24).
-
-    ``restrict``: optional macro-partition labels — when given, only edges
-    whose endpoints share a macro community are considered (the Leiden
-    refinement phase: moves never leave the enclosing community)."""
-    n = g.n_max
-    sentinel = jnp.int32(n)
-    vmask = g.vertex_mask()
-
-    deg = g.weighted_degrees()                       # volVertex (Alg. 2 l.5)
-    vol_v = g.total_volume()
-    vol_com = jax.ops.segment_sum(deg, jnp.clip(com, 0, n - 1), num_segments=n)
-    size_com = jax.ops.segment_sum(
-        jnp.where(vmask, 1, 0), jnp.clip(com, 0, n - 1), num_segments=n
+def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
+                max_sweeps: Optional[int] = None) -> EngineSpec:
+    return EngineSpec(
+        evaluator="louvain",
+        backend=backend or cfg.backend,
+        max_sweeps=cfg.max_sweeps if max_sweeps is None else max_sweeps,
+        threshold=cfg.sweep_threshold,
+        move_prob=float(cfg.move_prob),
+        use_frontier=cfg.use_need_check,
+        singleton_rule=cfg.singleton_rule,
     )
-
-    # per-vertex best move via the shared GroupBy evaluator (Eq. 1, rescaled
-    # by 1/vol(V) for f32 conditioning; ΔQ = 2·gain/vol(V))
-    from repro.core import moves
-
-    valid = g.edge_mask & need[jnp.clip(g.dst, 0, n - 1)]
-    if restrict is not None:
-        same_macro = (restrict[jnp.clip(g.src, 0, n - 1)]
-                      == restrict[jnp.clip(g.dst, 0, n - 1)])
-        valid = valid & same_macro
-    best_gain, best_cand = moves.louvain_best_moves(
-        g.src, g.dst, g.w, valid, com, deg, vol_com, size_com, vol_v, n,
-        singleton_rule=singleton_rule,
-    )
-
-    move = vmask & need & (best_cand >= 0) & (best_gain > 0.0)   # ΔQ > 0 (l.17)
-    if move_prob < 1.0:
-        # Luby-style symmetry breaking for the synchronous sweep (DESIGN.md §2):
-        # moving a random subset of intenders per sweep emulates the async
-        # move order of the Chapel version and damps Jacobi oscillation.
-        from repro.core.common import hash_u32
-
-        coin = hash_u32(
-            jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(0x9E3779B1)
-            ^ hash_u32(it + seed * jnp.uint32(101))
-        )
-        move = move & (coin < jnp.uint32(int(move_prob * 4294967295.0)))
-    new_com = jnp.where(move, best_cand, com)
-    changed = move & (new_com != com)
-    delta_n = jnp.sum(changed.astype(jnp.int32))
-    need_next = neighbor_or_self_changed(g, changed)
-    return new_com, need_next, delta_n
-
-
-def _louvain_sweep_ell(g, ell_graph, com, need, singleton_rule, use_pallas,
-                       it=0, seed=0, move_prob=1.0):
-    """Local-moving over degree-bucketed tiles via the delta_q kernel."""
-    from repro.kernels.delta_q import ops as dq_ops
-
-    n = g.n_max
-    vmask = g.vertex_mask()
-    deg = g.weighted_degrees()
-    vol_v = g.total_volume()
-    vol_com = jax.ops.segment_sum(deg, jnp.clip(com, 0, n - 1), num_segments=n)
-    size_com = jax.ops.segment_sum(
-        jnp.where(vmask, 1, 0), jnp.clip(com, 0, n - 1), num_segments=n
-    )
-
-    com_ext = jnp.concatenate([com, jnp.int32([n])])
-    vol_ext = jnp.concatenate([vol_com, jnp.zeros((1,), vol_com.dtype)])
-    size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
-    deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
-
-    new_com = com
-    changed = jnp.zeros((n,), bool)
-    for b in ell_graph.buckets:
-        rows = jnp.asarray(b.rows)
-        nbr = jnp.asarray(b.nbr)
-        w = jnp.asarray(b.w)
-        rows_c = jnp.clip(rows, 0, n)
-        nbr_c = jnp.clip(nbr, 0, n)
-        cand = jnp.where(nbr < n, com_ext[nbr_c], n)
-        best_cand, best_gain = dq_ops.delta_q_argmax(
-            cand_com=cand,
-            nbr_w=w,
-            cur_com=com_ext[rows_c],
-            deg_v=deg_ext[rows_c],
-            vol_cand=vol_ext[jnp.clip(cand, 0, n)],
-            vol_cur=vol_ext[jnp.clip(com_ext[rows_c], 0, n)],
-            size_cand=size_ext[jnp.clip(cand, 0, n)],
-            size_cur=size_ext[jnp.clip(com_ext[rows_c], 0, n)],
-            vol_total=vol_v,
-            sentinel=n,
-            singleton_rule=singleton_rule,
-            use_pallas=use_pallas,
-        )
-        row_ok = (rows < n) & need[jnp.clip(rows, 0, n - 1)]
-        move = row_ok & (best_cand >= 0) & (best_gain > 0.0)
-        if move_prob < 1.0:
-            from repro.core.common import hash_u32
-
-            coin = hash_u32(
-                jnp.clip(rows, 0, n - 1).astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
-                ^ hash_u32(jnp.uint32(it) + jnp.uint32(seed) * jnp.uint32(101))
-            )
-            move = move & (coin < jnp.uint32(int(move_prob * 4294967295.0)))
-        upd = jnp.clip(jnp.where(move, rows, n), 0, n - 1)
-        new_vals = jnp.where(move, best_cand, new_com[upd])
-        new_com = new_com.at[upd].set(new_vals)
-        changed = changed.at[upd].max(move & (best_cand != com_ext[rows_c]))
-
-    if ell_graph.has_tail:
-        # high-degree tail: reuse the segment sweep restricted to tail vertices
-        is_tail = jnp.zeros((n,), bool).at[jnp.asarray(ell_graph.tail_vertices)].set(True)
-        t_com, _, _ = _louvain_sweep_segment(
-            g, com, need & is_tail,
-            it=jnp.uint32(it), seed=jnp.uint32(seed),
-            singleton_rule=singleton_rule, move_prob=move_prob,
-        )
-        t_changed = t_com != com
-        new_com = jnp.where(t_changed, t_com, new_com)
-        changed = changed | t_changed
-
-    delta_n = jnp.sum(changed.astype(jnp.int32))
-    need_next = neighbor_or_self_changed(g, changed)
-    return new_com, need_next, delta_n
 
 
 # ------------------------------------------------------------ refinement
@@ -208,21 +88,15 @@ def _refine_partition(cur: Graph, com_macro: jax.Array, cfg: LouvainConfig,
     """Leiden refinement: greedy modularity merges restricted to the macro
     communities, starting from singletons.  Guarantees every aggregated
     super-vertex is contained in (and connected within) a macro community."""
-    n = cur.n_max
-    ref = jnp.arange(n, dtype=jnp.int32)
-    need = cur.vertex_mask()
-    for s in range(cfg.refine_sweeps):
-        ref, need, dn = _louvain_sweep_segment(
-            g=cur, com=ref, need=need,
-            it=jnp.uint32(level * 1000 + 500 + s),
-            seed=jnp.uint32(cfg.seed),
-            singleton_rule=cfg.singleton_rule,
-            move_prob=float(cfg.move_prob),
-            restrict=com_macro,
-        )
-        if int(dn) == 0:
-            break
-    return ref
+    spec = engine_spec(cfg, backend="segment",
+                       max_sweeps=cfg.refine_sweeps).replace(threshold=0)
+    engine = SweepEngine(cur, spec)
+    res = engine.run_phase(
+        *engine.singleton_state(),
+        it0=level * 1000 + 500, seed=cfg.seed,
+        restrict=com_macro, fused=cfg.fused,
+    )
+    return res.labels
 
 
 # ------------------------------------------------------------ driver (Alg. 3)
@@ -238,53 +112,31 @@ def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), g_original: Optional
     timer = Timer()
     g0 = g_original if g_original is not None else g
     n = g.n_max
+    spec = engine_spec(cfg)
 
     assign = jnp.arange(n, dtype=jnp.int32)  # original vertex -> community
     cur = g
     mod_hist: list = []
     sweeps_per_level: list = []
     levels = 0
-    ell_graph = None
 
     init_com = None   # Leiden: macro partition seeds the next level
     for level in range(cfg.max_levels):
+        with timer.phase("ell_build") if cfg.backend in ("ell", "pallas") \
+                else contextlib.nullcontext():
+            engine = SweepEngine(cur, spec)
         com = (jnp.arange(n, dtype=jnp.int32)  # singleton init (Alg. 2 l.4)
                if init_com is None else init_com)
         init_com = None
         need = cur.vertex_mask()               # needCheck = true (l.7)
-        if cfg.backend in ("ell", "pallas"):
-            from repro.graph.ell import build_ell
 
-            with timer.phase("ell_build"):
-                ell_graph = build_ell(cur)
-
-        sweeps = 0
-        for s in range(cfg.max_sweeps):
-            with timer.phase("local_moving"):
-                if cfg.backend == "segment":
-                    com, need, dn = _louvain_sweep_segment(
-                        g=cur,
-                        com=com,
-                        need=need,
-                        it=jnp.uint32(level * 1000 + s),
-                        seed=jnp.uint32(cfg.seed),
-                        singleton_rule=cfg.singleton_rule,
-                        move_prob=float(cfg.move_prob),
-                    )
-                else:
-                    com, need, dn = _louvain_sweep_ell(
-                        cur, ell_graph, com, need, cfg.singleton_rule,
-                        use_pallas=(cfg.backend == "pallas"),
-                        it=level * 1000 + s, seed=cfg.seed,
-                        move_prob=float(cfg.move_prob),
-                    )
-                if not cfg.use_need_check:
-                    need = cur.vertex_mask()
-                dn = int(dn)
-            sweeps = s + 1
-            if dn <= cfg.sweep_threshold:
-                break
-        sweeps_per_level.append(sweeps)
+        # ONE fused while_loop call per level (DESIGN.md §Engine): the whole
+        # local-moving phase converges on device before anything syncs back
+        with timer.phase("local_moving"):
+            res = engine.run_phase(
+                com, need, it0=level * 1000, seed=cfg.seed, fused=cfg.fused)
+        com = res.labels
+        sweeps_per_level.append(res.sweeps)
 
         with timer.phase("aggregation"):
             new_com, n_comm = aggregation.remap_communities(com, cur.vertex_mask())

@@ -6,6 +6,9 @@ Both PLP (Alg. 1 l.18) and Louvain local-moving (Alg. 2 l.13-16) reduce to:
 — the sort+segment GroupBy pattern.  The distributed sweeps call these on
 *local* edge shards (each vertex's in-edges live on its owner device), so the
 same code serves 1 device or a 512-chip mesh.
+
+``core.engine`` composes these evaluators with shared move-gating / frontier
+plumbing into the fused per-level sweep loop (DESIGN.md §Engine).
 """
 from __future__ import annotations
 
@@ -56,6 +59,27 @@ def plp_best_labels(
         jnp.where(cur_match, score, 0.0), seg_ids, num_segments=n + 1
     )
     return best_score[:n], best_lab[:n], cur_score[:n]
+
+
+def community_aux(
+    com: jax.Array,
+    deg: jax.Array,
+    vmask: jax.Array,
+    n: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """(vol_com[n], size_com[n]) — the replicated per-sweep Louvain state.
+
+    Stands in for the paper's atomically-maintained volCom array (Alg. 2
+    l.18-19): the synchronous sweep recomputes it from scratch, which is
+    cheap, deterministic, and needs no cross-device communication when
+    ``com``/``deg`` are replicated.
+    """
+    com_c = jnp.clip(com, 0, n - 1)
+    vol_com = jax.ops.segment_sum(deg, com_c, num_segments=n)
+    size_com = jax.ops.segment_sum(
+        jnp.where(vmask, 1, 0), com_c, num_segments=n
+    )
+    return vol_com, size_com
 
 
 def louvain_best_moves(

@@ -10,25 +10,22 @@ Faithful structure:
 
 Adaptation (DESIGN.md §2): the paper's asynchronous shared-array update with
 benign races becomes a synchronous Jacobi sweep; thread-race tie randomization
-becomes seeded hash noise (``tie_noise``).  Two interchangeable move backends:
-
-  * ``segment`` — lax.sort + segment reductions (Arkouda GroupBy analogue);
-  * ``pallas``/``ell``   — degree-bucketed ELL tiles through the
-    ``kernels/label_argmax`` Pallas kernel (or its jnp oracle).
+becomes seeded hash noise (``tie_noise``).  The sweep itself lives in the
+shared ``core.engine`` (DESIGN.md §Engine): this module only configures the
+``plp`` evaluator and packages results.  With ``fused=True`` (default) the
+whole label-propagation run is ONE jitted ``lax.while_loop`` call with
+on-device convergence; ``fused=False`` is the stepwise reference.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from functools import partial
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ConfigBase
-from repro.core.common import neighbor_or_self_changed, tie_noise
-from repro.graph import segment as seg
+from repro.core.engine import EngineSpec, SweepEngine
 from repro.graph.structure import Graph
 from repro.utils.timing import Timer
 
@@ -46,6 +43,7 @@ class PLPConfig(ConfigBase):
     # random preference per (vertex,label) pair (converges; default).
     reshuffle_ties: bool = False
     move_prob: float = 0.75     # Luby-style move gating (1.0 = pure Jacobi)
+    fused: bool = True          # one while_loop call vs per-sweep dispatch
 
 
 @dataclasses.dataclass
@@ -57,196 +55,33 @@ class PLPResult:
     timer: Timer
 
 
-# ---------------------------------------------------------------- segment path
-
-
-@partial(jax.jit, static_argnames=("tie_eps", "move_prob"))
-def _plp_sweep_segment(
-    g: Graph,
-    labels: jax.Array,
-    active: jax.Array,
-    it: jax.Array,
-    tie_eps: float,
-    seed: jax.Array,
-    sweep_idx: jax.Array = jnp.uint32(0),
-    move_prob: float = 1.0,
-):
-    """One synchronous PLP move over all active vertices."""
-    from repro.core import moves
-
-    n = g.n_max
-    valid = g.edge_mask & active[jnp.clip(g.dst, 0, n - 1)]
-    best_score, best_lab, cur_score = moves.plp_best_labels(
-        g.src, g.dst, g.w, valid, labels, n, it.astype(jnp.uint32), seed, tie_eps
+def engine_spec(cfg: PLPConfig) -> EngineSpec:
+    return EngineSpec(
+        evaluator="plp",
+        backend=cfg.backend,
+        max_sweeps=cfg.max_iterations,
+        threshold=cfg.threshold,
+        tie_eps=float(cfg.tie_eps),
+        move_prob=float(cfg.move_prob),
+        use_frontier=cfg.use_frontier,
+        reshuffle_ties=cfg.reshuffle_ties,
     )
-    adopt = active & (best_lab >= 0) & (best_score > cur_score)
-    if move_prob < 1.0:
-        # Luby-style gating: emulates the paper's async move order, breaks
-        # synchronous two-cycles (see DESIGN.md §2).
-        from repro.core.common import hash_u32
-
-        coin = hash_u32(
-            jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(0x85EBCA6B)
-            ^ hash_u32(sweep_idx + seed * jnp.uint32(313))
-        )
-        adopt = adopt & (coin < jnp.uint32(int(move_prob * 4294967295.0)))
-    new_labels = jnp.where(adopt, best_lab, labels)
-    changed = adopt & (new_labels != labels)
-    delta_n = jnp.sum(changed.astype(jnp.int32))
-
-    next_active = neighbor_or_self_changed(g, changed)
-    return new_labels, next_active, delta_n
-
-
-# ---------------------------------------------------------------- ELL/Pallas path
-
-
-def _plp_sweep_ell(g, ell_graph, labels, active, it, tie_eps, seed, use_pallas,
-                   sweep_idx=0, move_prob=1.0):
-    """Move step over degree-bucketed dense tiles (kernel or jnp oracle)."""
-    from repro.kernels.label_argmax import ops as la_ops
-
-    n = g.n_max
-    new_labels = labels
-    changed = jnp.zeros((n,), dtype=bool)
-    labels_ext = jnp.concatenate([labels, jnp.int32([n])])  # sentinel slot
-
-    for b in ell_graph.buckets:
-        rows = jnp.asarray(b.rows)
-        nbr = jnp.asarray(b.nbr)
-        w = jnp.asarray(b.w)
-        nbr_lab = labels_ext[jnp.clip(nbr, 0, n)]
-        nbr_lab = jnp.where(nbr < n, nbr_lab, n)  # sentinel label for padding
-        row_ok = rows < n
-        cur_lab = labels_ext[jnp.clip(rows, 0, n)]
-        best_lab, best_score, cur_score = la_ops.label_argmax(
-            nbr_lab,
-            w,
-            cur_lab,
-            jnp.where(rows < n, rows, n),
-            jnp.uint32(seed) + jnp.uint32(it),
-            tie_eps=tie_eps,
-            sentinel=n,
-            use_pallas=use_pallas,
-        )
-        row_active = active[jnp.clip(rows, 0, n - 1)] & row_ok
-        adopt = row_active & (best_lab >= 0) & (best_score > cur_score)
-        if move_prob < 1.0:
-            from repro.core.common import hash_u32
-
-            coin = hash_u32(
-                jnp.clip(rows, 0, n - 1).astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
-                ^ hash_u32(jnp.uint32(sweep_idx) + jnp.uint32(seed) * jnp.uint32(313))
-            )
-            adopt = adopt & (coin < jnp.uint32(int(move_prob * 4294967295.0)))
-        upd_idx = jnp.where(adopt, rows, n)
-        new_labels = new_labels.at[jnp.clip(upd_idx, 0, n - 1)].set(
-            jnp.where(adopt, best_lab, new_labels[jnp.clip(upd_idx, 0, n - 1)])
-        )
-        did = adopt & (best_lab != cur_lab)
-        changed = changed.at[jnp.clip(upd_idx, 0, n - 1)].max(
-            jnp.where(upd_idx < n, did, False)
-        )
-
-    # tail vertices (deg > max bucket width): segment path on their edges
-    if ell_graph.has_tail:
-        tail_new, tail_changed = _tail_move(g, ell_graph, labels, active, it, tie_eps, seed)
-        new_labels = jnp.where(tail_changed, tail_new, new_labels)
-        changed = changed | tail_changed
-
-    delta_n = jnp.sum(changed.astype(jnp.int32))
-    next_active = neighbor_or_self_changed(g, changed)
-    return new_labels, next_active, delta_n
-
-
-def _tail_move(g, ell_graph, labels, active, it, tie_eps, seed):
-    n = g.n_max
-    idx = jnp.asarray(ell_graph.tail_edge_idx)
-    # src/dst arrays of g are in dst-undefined order; tail_edge_idx indexes the
-    # dst-sorted view built in ell.py, so re-sort here to match.
-    order = jnp.lexsort((g.src, g.dst))
-    src_s, dst_s, w_s = g.src[order], g.dst[order], g.w[order]
-    tsrc, tdst, tw = src_s[idx], dst_s[idx], w_s[idx]
-    valid = (tsrc < n) & (tdst < n) & (tsrc != tdst)
-    lab_k = jnp.where(valid, labels[jnp.clip(tsrc, 0, n - 1)], n)
-    dst_k = jnp.where(valid, tdst, n)
-    (gk, gs, gvalid, _) = seg.groupby_sum((dst_k, lab_k), jnp.where(valid, tw, 0.0))
-    gdst, glab = gk
-    grp_ok = gvalid & (gdst < n) & (glab < n)
-    noise = tie_noise(gdst, glab, jnp.uint32(seed) + jnp.uint32(it), tie_eps)
-    score = jnp.where(grp_ok, gs + noise, -jnp.inf)
-    seg_ids = jnp.where(grp_ok, gdst, n)
-    best_score, best_lab = seg.segment_argmax(score, glab, seg_ids, n + 1, valid=grp_ok)
-    best_score, best_lab = best_score[:n], best_lab[:n]
-    cur_match = grp_ok & (glab == labels[jnp.clip(gdst, 0, n - 1)])
-    cur_score = jax.ops.segment_sum(
-        jnp.where(cur_match, score, 0.0), seg_ids, num_segments=n + 1
-    )[:n]
-    is_tail = jnp.zeros((n,), bool).at[jnp.asarray(ell_graph.tail_vertices)].set(True)
-    adopt = is_tail & active & (best_lab >= 0) & (best_score > cur_score)
-    new_labels = jnp.where(adopt, best_lab, labels)
-    return new_labels, adopt & (new_labels != labels)
-
-
-# ---------------------------------------------------------------- driver
 
 
 def plp(g: Graph, cfg: PLPConfig = PLPConfig(), ell_graph=None) -> PLPResult:
     """Run Parallel Label Propagation; returns final labels + history."""
     timer = Timer()
-    n = g.n_max
-    labels = jnp.arange(n, dtype=jnp.int32)       # singleton init (l.4)
-    active = g.vertex_mask()                       # V_active = V (l.5)
-    if not cfg.use_frontier:
-        always_active = g.vertex_mask()
+    with timer.phase("ell_build") if cfg.backend in ("ell", "pallas") \
+            else contextlib.nullcontext():
+        engine = SweepEngine(g, engine_spec(cfg), ell=ell_graph)
 
-    if cfg.backend in ("ell", "pallas") and ell_graph is None:
-        from repro.graph.ell import build_ell
-
-        with timer.phase("ell_build"):
-            ell_graph = build_ell(g)
-
-    dn_hist, act_hist = [], []
-    it_done = 0
-    for it in range(cfg.max_iterations):
-        noise_it = it if cfg.reshuffle_ties else 0
-        with timer.phase("move"):
-            if cfg.backend == "segment":
-                labels, active, dn = _plp_sweep_segment(
-                    g,
-                    labels,
-                    active,
-                    jnp.uint32(noise_it),
-                    float(cfg.tie_eps),
-                    jnp.uint32(cfg.seed),
-                    sweep_idx=jnp.uint32(it),
-                    move_prob=float(cfg.move_prob),
-                )
-            else:
-                labels, active, dn = _plp_sweep_ell(
-                    g,
-                    ell_graph,
-                    labels,
-                    active,
-                    noise_it,
-                    cfg.tie_eps,
-                    cfg.seed,
-                    use_pallas=(cfg.backend == "pallas"),
-                    sweep_idx=it,
-                    move_prob=float(cfg.move_prob),
-                )
-            if not cfg.use_frontier:
-                active = always_active
-            dn = int(dn)
-        dn_hist.append(dn)
-        act_hist.append(int(jnp.sum(active.astype(jnp.int32))))
-        it_done = it + 1
-        if dn <= cfg.threshold:   # paper l.9
-            break
+    labels, active = engine.singleton_state()
+    with timer.phase("move"):
+        res = engine.run_phase(labels, active, seed=cfg.seed, fused=cfg.fused)
     return PLPResult(
-        labels=np.asarray(labels),
-        iterations=it_done,
-        delta_n_history=dn_hist,
-        active_history=act_hist,
+        labels=np.asarray(res.labels),
+        iterations=res.sweeps,
+        delta_n_history=res.delta_n_history,
+        active_history=res.active_history,
         timer=timer,
     )

@@ -10,14 +10,18 @@ community detection codes.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.structure import Graph
 
 BUCKET_WIDTHS = (16, 64, 256, 1024)
 ROW_PAD = 8  # sublane alignment for (rows, W) tiles
+CHUNK_ELEMS = 1 << 15  # target neighbor slots per scan chunk (DESIGN.md §Engine)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +115,111 @@ def build_ell(
         loop_w=loop_w,
         deg_w=deg_w.astype(np.float32),
     )
+
+
+# ------------------------------------------------------------ device layout
+#
+# The sweep engine (core/engine.py) runs the whole local-moving phase inside
+# one jitted lax.while_loop, so bucket tiles must be device-resident pytree
+# leaves (host numpy would force a transfer per sweep) and scan-friendly:
+# each bucket is stacked into (n_chunks, rows_per_chunk, W) so the evaluator
+# is a lax.scan over chunks instead of one giant unrolled tile.
+
+
+def _rows_per_chunk(width: int, target_elems: int = CHUNK_ELEMS) -> int:
+    return max(ROW_PAD, (target_elems // max(1, width)) // ROW_PAD * ROW_PAD)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "nbr", "w"],
+    meta_fields=["width"],
+)
+@dataclasses.dataclass(frozen=True)
+class DeviceBucket:
+    """One degree bucket, chunk-stacked for lax.scan.
+
+    rows: int32[C, Rc]      vertex id per row (sentinel n_max for padding)
+    nbr:  int32[C, Rc, W]   neighbor ids (sentinel n_max padding)
+    w:    float32[C, Rc, W] edge weights (0 padding)
+    """
+
+    rows: jax.Array
+    nbr: jax.Array
+    w: jax.Array
+    width: int
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["buckets", "tail_src", "tail_dst", "tail_w", "is_tail"],
+    meta_fields=["n_max", "has_tail"],
+)
+@dataclasses.dataclass(frozen=True)
+class DeviceEll:
+    """Device-resident ELL layout consumed inside the fused sweep loop.
+
+    Tail edges are pre-extracted (src, dst, w) arrays so the per-sweep
+    ``lexsort`` of the legacy path is hoisted out of the loop entirely.
+    """
+
+    buckets: Tuple[DeviceBucket, ...]
+    tail_src: jax.Array   # int32[K]
+    tail_dst: jax.Array   # int32[K]
+    tail_w: jax.Array     # float32[K]
+    is_tail: jax.Array    # bool[n_max]
+    n_max: int
+    has_tail: bool
+
+
+def to_device(g: Graph, e: EllGraph, rows_per_chunk: Optional[int] = None) -> DeviceEll:
+    """Stack an EllGraph into the device-resident scan layout (one-time cost)."""
+    n = e.n_max
+    buckets: List[DeviceBucket] = []
+    for b in e.buckets:
+        W = b.width
+        rc = rows_per_chunk or _rows_per_chunk(W)
+        r = b.rows.shape[0]
+        r_pad = int(np.ceil(max(1, r) / rc) * rc)
+        rows = np.full(r_pad, n, dtype=np.int32)
+        nbr = np.full((r_pad, W), n, dtype=np.int32)
+        ww = np.zeros((r_pad, W), dtype=np.float32)
+        rows[:r], nbr[:r], ww[:r] = b.rows, b.nbr, b.w
+        c = r_pad // rc
+        buckets.append(
+            DeviceBucket(
+                rows=jnp.asarray(rows.reshape(c, rc)),
+                nbr=jnp.asarray(nbr.reshape(c, rc, W)),
+                w=jnp.asarray(ww.reshape(c, rc, W)),
+                width=W,
+            )
+        )
+
+    # materialize tail edges from the same dst-sorted view build_ell indexed
+    src, dst, w = g.to_numpy_edges()
+    order = np.lexsort((src, dst))
+    src, dst, w = src[order], dst[order], w[order]
+    idx = e.tail_edge_idx
+    is_tail = np.zeros(n, dtype=bool)
+    is_tail[e.tail_vertices] = True
+    return DeviceEll(
+        buckets=tuple(buckets),
+        tail_src=jnp.asarray(src[idx].astype(np.int32)),
+        tail_dst=jnp.asarray(dst[idx].astype(np.int32)),
+        tail_w=jnp.asarray(w[idx].astype(np.float32)),
+        is_tail=jnp.asarray(is_tail),
+        n_max=n,
+        has_tail=bool(e.tail_vertices.size),
+    )
+
+
+def build_device_ell(
+    g: Graph,
+    widths: Tuple[int, ...] = BUCKET_WIDTHS,
+    rows_per_chunk: Optional[int] = None,
+) -> DeviceEll:
+    """build_ell + to_device in one call (the engine's default path)."""
+    return to_device(g, build_ell(g, widths), rows_per_chunk)
 
 
 def ell_stats(e: EllGraph) -> dict:

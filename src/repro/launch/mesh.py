@@ -25,8 +25,11 @@ from jax.sharding import Mesh
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    try:  # jax >= 0.5: explicit axis types
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:

@@ -1,0 +1,125 @@
+"""Sweep-engine parity: the fused while_loop phase must reproduce the
+stepwise (one jitted call per sweep) reference bit-for-bit at fixed seed,
+for both evaluators on both single-device backends (DESIGN.md §Engine)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.engine import EngineSpec, SweepEngine
+from repro.core.louvain import LouvainConfig, louvain
+from repro.core.plp import PLPConfig, plp
+from repro.graph.builders import from_numpy_edges
+from repro.graph.ell import build_ell, to_device
+from repro.graph.generators import ring_of_cliques, sbm
+
+
+def _graph(seed=7):
+    u, v, w, _ = sbm(200, 5, p_in=0.3, p_out=0.03, seed=seed)
+    return from_numpy_edges(u, v, w)
+
+
+def _spec(evaluator, backend, **kw):
+    base = dict(max_sweeps=30, threshold=0, move_prob=0.75)
+    base.update(kw)
+    return EngineSpec(evaluator=evaluator, backend=backend, **base)
+
+
+@pytest.mark.parametrize("evaluator", ["plp", "louvain"])
+@pytest.mark.parametrize("backend", ["segment", "ell"])
+def test_fused_matches_stepwise_bitwise(evaluator, backend):
+    g = _graph()
+    engine = SweepEngine(g, _spec(evaluator, backend))
+    r_fused = engine.run_phase(*engine.singleton_state(), seed=3, fused=True)
+    r_step = engine.run_phase(*engine.singleton_state(), seed=3, fused=False)
+    np.testing.assert_array_equal(
+        np.asarray(r_fused.labels), np.asarray(r_step.labels))
+    np.testing.assert_array_equal(
+        np.asarray(r_fused.active), np.asarray(r_step.active))
+    assert r_fused.sweeps == r_step.sweeps
+    assert r_fused.delta_n_history == r_step.delta_n_history
+    assert r_fused.active_history == r_step.active_history
+
+
+def test_fused_matches_stepwise_with_tail():
+    # tiny bucket widths force high-degree vertices onto the tail path
+    g = _graph(seed=11)
+    ell = to_device(g, build_ell(g, widths=(4, 8)))
+    assert ell.has_tail
+    engine = SweepEngine(g, _spec("plp", "ell"), ell=ell)
+    r_fused = engine.run_phase(*engine.singleton_state(), seed=1, fused=True)
+    r_step = engine.run_phase(*engine.singleton_state(), seed=1, fused=False)
+    np.testing.assert_array_equal(
+        np.asarray(r_fused.labels), np.asarray(r_step.labels))
+    assert r_fused.delta_n_history == r_step.delta_n_history
+
+
+def test_convergence_contract():
+    """Fused loop must stop at the first sweep with ΔN <= threshold and
+    record exactly the executed sweeps."""
+    g = _graph()
+    engine = SweepEngine(g, _spec("plp", "segment", threshold=2))
+    res = engine.run_phase(*engine.singleton_state(), seed=0, fused=True)
+    assert 0 < res.sweeps <= 30
+    assert len(res.delta_n_history) == res.sweeps
+    assert res.delta_n_history[-1] <= 2
+    assert all(dn > 2 for dn in res.delta_n_history[:-1])
+
+
+@pytest.mark.parametrize("backend", ["segment", "ell"])
+def test_plp_driver_fused_matches_stepwise(backend):
+    u, v, w, _ = ring_of_cliques(8, 6)
+    g = from_numpy_edges(u, v, w)
+    cfg = PLPConfig(max_iterations=50, backend=backend, seed=5)
+    r_fused = plp(g, cfg.replace(fused=True))
+    r_step = plp(g, cfg.replace(fused=False))
+    np.testing.assert_array_equal(r_fused.labels, r_step.labels)
+    assert r_fused.iterations == r_step.iterations
+    assert r_fused.delta_n_history == r_step.delta_n_history
+
+
+@pytest.mark.parametrize("backend", ["segment", "ell"])
+def test_louvain_driver_fused_matches_stepwise(backend):
+    g = _graph(seed=4)
+    cfg = LouvainConfig(seed=4, backend=backend, track_modularity=False)
+    r_fused = louvain(g, cfg.replace(fused=True))
+    r_step = louvain(g, cfg.replace(fused=False))
+    np.testing.assert_array_equal(r_fused.labels, r_step.labels)
+    assert r_fused.levels == r_step.levels
+    assert r_fused.sweeps_per_level == r_step.sweeps_per_level
+    assert r_fused.modularity == r_step.modularity
+
+
+def test_leiden_fused_matches_stepwise():
+    from repro.core.louvain import leiden
+
+    g = _graph(seed=9)
+    cfg = LouvainConfig(seed=9, track_modularity=False)
+    r_fused = leiden(g, cfg.replace(fused=True))
+    r_step = leiden(g, cfg.replace(fused=False))
+    np.testing.assert_array_equal(r_fused.labels, r_step.labels)
+    assert r_fused.modularity == r_step.modularity
+
+
+def test_restrict_requires_segment_backend():
+    g = _graph()
+    engine = SweepEngine(g, _spec("louvain", "ell"))
+    with pytest.raises(ValueError, match="segment"):
+        engine.run_phase(*engine.singleton_state(),
+                         restrict=jnp.zeros((g.n_max,), jnp.int32))
+
+
+def test_device_ell_roundtrip_covers_all_edges():
+    """Chunk-stacked device layout must contain every non-loop edge exactly
+    once across buckets + tail."""
+    g = _graph(seed=2)
+    n = g.n_max
+    ell = to_device(g, build_ell(g, widths=(4, 8)))
+    src, dst, w = g.to_numpy_edges()
+    expect = int(np.sum(src != dst))
+    got = int(np.asarray(ell.tail_src).size)
+    # tail keeps self-loops of tail vertices (full in-edge slice); subtract
+    t_src, t_dst = np.asarray(ell.tail_src), np.asarray(ell.tail_dst)
+    got -= int(np.sum(t_src == t_dst))
+    for b in ell.buckets:
+        got += int(np.sum(np.asarray(b.nbr) < n))
+    assert got == expect
