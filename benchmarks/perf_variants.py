@@ -9,6 +9,14 @@ while_loop phase against the stepwise per-sweep-dispatch reference —
 
   PYTHONPATH=src python -m benchmarks.perf_variants community com-dblp \
       algo=plp repeat=3
+
+Level-fusion mode (DESIGN.md §Pipeline): time the whole-run fused pipeline
+(one dispatch per louvain() call) against the per-level driver, with the
+paper-style fig4 local-moving/aggregation phase split per level and the
+one-sort vs two-sort groupby compaction delta —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants level_fusion com-dblp \
+      algo=both repeat=3
 """
 import json
 import os
@@ -116,7 +124,11 @@ def run_community(dataset: str = "com-dblp", algo: str = "both",
         out["plp_stepwise_s"] = best_of(lambda: plp(g, cfg.replace(fused=False)))
         out["plp_fused_speedup"] = out["plp_stepwise_s"] / out["plp_fused_s"]
     if algo in ("louvain", "both"):
-        cfg = LouvainConfig(track_modularity=False, backend=backend)
+        # pipeline_fused pinned False: this mode isolates the §Engine
+        # per-SWEEP dispatch overhead; §Pipeline level-loop fusion is
+        # measured separately by run_level_fusion
+        cfg = LouvainConfig(track_modularity=False, backend=backend,
+                            pipeline_fused=False)
         out["louvain_fused_s"] = best_of(
             lambda: louvain(g, cfg.replace(fused=True)))
         out["louvain_stepwise_s"] = best_of(
@@ -127,14 +139,124 @@ def run_community(dataset: str = "com-dblp", algo: str = "both",
     return out
 
 
+def run_level_fusion(dataset: str = "com-dblp", algo: str = "both",
+                     repeat: int = 3, backend: str = "segment"):
+    """Whole-run pipeline fusion vs per-level driver (DESIGN.md §Pipeline).
+
+    ``pipeline_fused=True`` runs the entire level loop (local-moving +
+    aggregation + modularity accounting) as ONE jitted lax.while_loop with
+    one readback; ``pipeline_fused=False`` dispatches one fused local-moving
+    phase per level and aggregates on host.  Results are bit-identical
+    (tests/test_pipeline.py); the delta is per-level dispatch + transfer
+    overhead.  Also reports:
+
+      * the paper-style fig4 phase split per level (local-moving vs
+        aggregation wall share, from the per-level driver's level-tagged
+        timer) plus the on-device histories of the fused run (sweeps, ΔN,
+        community counts per level);
+      * the aggregation compaction delta: one-sort scatter vs legacy
+        two-sort argsort ``groupby_sum`` on this dataset's coarsening keys.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core.louvain import LouvainConfig, louvain, leiden
+    from repro.graph import datasets
+    from repro.graph import segment as seg
+
+    lg = datasets.load(dataset)
+    g = lg.graph
+    out = {"mode": "level_fusion", "dataset": dataset, "V": lg.n,
+           "E": lg.m_undirected, "backend": backend}
+
+    def ab_best(fa, fb):
+        """Interleaved A/B best-of timing: warm both once, then alternate
+        repeats so CPU frequency / cache drift biases neither side (results
+        are deterministic; the warm run's result is returned)."""
+        warm = fa()
+        fb()
+        ta = tb = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fa()
+            dt = time.perf_counter() - t0
+            ta = dt if ta is None else min(ta, dt)
+            t0 = time.perf_counter()
+            fb()
+            dt = time.perf_counter() - t0
+            tb = dt if tb is None else min(tb, dt)
+        return ta, tb, warm
+
+    algos = ("louvain", "leiden") if algo == "both" else (algo,)
+    for name in algos:
+        run = leiden if name == "leiden" else louvain
+        cfg = LouvainConfig(track_modularity=False, backend=backend)
+        (out[f"{name}_pipeline_s"], out[f"{name}_per_level_s"],
+         res) = ab_best(
+            lambda: run(g, cfg.replace(pipeline_fused=True)),
+            lambda: run(g, cfg.replace(pipeline_fused=False)))
+        out[f"{name}_pipeline_speedup"] = (
+            out[f"{name}_per_level_s"] / out[f"{name}_pipeline_s"])
+
+        # on-device histories from the (deterministic) fused warm run
+        out[f"{name}_levels"] = res.levels
+        out[f"{name}_sweeps_per_level"] = res.sweeps_per_level
+        out[f"{name}_n_comm_per_level"] = res.n_comm_per_level
+        out[f"{name}_delta_n_per_level"] = res.delta_n_per_level
+
+        # fig4-style per-level phase split from the per-level driver
+        res_t = run(g, cfg.replace(pipeline_fused=False,
+                                   per_level_timing=True))
+        split = []
+        for level in range(res_t.levels):
+            lm = res_t.timer.totals.get(f"L{level:02d}/local_moving", 0.0)
+            ag = res_t.timer.totals.get(f"L{level:02d}/aggregation", 0.0)
+            rf = res_t.timer.totals.get(f"L{level:02d}/refinement", 0.0)
+            tot = lm + ag or 1e-12
+            split.append({"level": level, "local_moving_s": lm,
+                          "aggregation_s": ag, "refinement_s": rf,
+                          "aggregation_share": ag / tot})
+        out[f"{name}_phase_split"] = split
+
+    # groupby compaction micro-benchmark on this graph's level-0 coarsening
+    # keys: one lax.sort (scatter compaction) vs two (argsort compaction)
+    import jax
+    import jax.numpy as jnp
+
+    res0 = louvain(g, LouvainConfig(track_modularity=False, max_levels=1,
+                                    backend=backend))
+    com = jnp.asarray(
+        np.concatenate([res0.labels,
+                        np.arange(len(res0.labels), g.n_max)]), jnp.int32)
+    n = g.n_max
+    csrc = jnp.where(g.edge_mask, com[jnp.clip(g.src, 0, n - 1)], n)
+    cdst = jnp.where(g.edge_mask, com[jnp.clip(g.dst, 0, n - 1)], n)
+    w = jnp.where(g.edge_mask, g.w, 0.0)
+    fns = {how: jax.jit(lambda a, b, v, m, how=how: seg.groupby_sum(
+        (a, b), v, valid=m, compact_via=how)[1]) for how in
+        ("scatter", "argsort")}
+    (out["groupby_scatter_s"], out["groupby_argsort_s"], _) = ab_best(
+        lambda: jax.block_until_ready(
+            fns["scatter"](csrc, cdst, w, g.edge_mask)),
+        lambda: jax.block_until_ready(
+            fns["argsort"](csrc, cdst, w, g.edge_mask)))
+    out["groupby_scatter_speedup"] = (
+        out["groupby_argsort_s"] / out["groupby_scatter_s"])
+
+    print(json.dumps(out, indent=1))
+    return out
+
+
 def main():
-    if sys.argv[1] == "community":
+    if sys.argv[1] in ("community", "level_fusion"):
         dataset = sys.argv[2] if len(sys.argv) > 2 else "com-dblp"
         kw = {}
         for tok in sys.argv[3:]:
             k, v = tok.split("=", 1)
             kw[k] = int(v) if k == "repeat" else v
-        run_community(dataset, **kw)
+        runner = run_community if sys.argv[1] == "community" else run_level_fusion
+        runner(dataset, **kw)
         return
     arch, shape = sys.argv[1], sys.argv[2]
     overrides = {}

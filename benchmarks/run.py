@@ -7,6 +7,9 @@
   fig4    — strong scaling of parallel Louvain over device counts,
             with the paper's phase breakdown (local-moving vs aggregation)
   sweep_fusion — fused (one while_loop/level) vs stepwise engine timings
+  level_fusion — whole-run pipeline (one dispatch per louvain()) vs the
+            per-level driver, with the fig4 per-level local-moving /
+            aggregation split and the groupby-compaction delta
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -158,12 +161,22 @@ from repro.core.distributed import distributed_louvain
 lg = datasets.load("com-livejournal")
 nd = int(sys.argv[1])
 mesh = Mesh(np.array(jax.devices()[:nd]).reshape(nd), ("data",))
+# fused pipeline (default): one dispatch for the whole level loop
 res = distributed_louvain(lg.graph, mesh)      # warm compile + run
 t0 = time.time()
 res = distributed_louvain(lg.graph, mesh)
 total = time.time() - t0
+# per-level driver: the paper's local-moving/aggregation phase breakdown
+distributed_louvain(lg.graph, mesh, pipeline_fused=False)   # warm
+t0 = time.time()
+res_pl = distributed_louvain(lg.graph, mesh, pipeline_fused=False)
+total_pl = time.time() - t0
 print(json.dumps({"devices": nd, "total_s": total,
-                  "phases": dict(res.timer.totals),
+                  "per_level_total_s": total_pl,
+                  "pipeline_speedup": total_pl / total,
+                  "phases": dict(res_pl.timer.totals),
+                  "sweeps_per_level": res.sweeps_per_level,
+                  "n_comm_per_level": res.n_comm_per_level,
                   "modularity": float(res.modularity)}))
 """
 
@@ -212,6 +225,32 @@ def bench_sweep_fusion(datasets=("com-amazon", "com-dblp")):
     return rows
 
 
+# ------------------------------------------------------------------ level fusion
+
+
+def bench_level_fusion(datasets=("com-amazon", "com-dblp")):
+    """Whole-run pipeline fusion vs per-level driver (DESIGN.md §Pipeline),
+    with the paper's fig4 phase breakdown per level."""
+    from benchmarks.perf_variants import run_level_fusion
+    rows = []
+    for name in datasets:
+        rec = run_level_fusion(name, algo="louvain", repeat=4)
+        rows.append(rec)
+        print(f"[level_fusion] {name:18s} "
+              f"louvain {rec['louvain_per_level_s']:.3f}s -> "
+              f"{rec['louvain_pipeline_s']:.3f}s "
+              f"({rec['louvain_pipeline_speedup']:.2f}x)  "
+              f"groupby 2-sort {rec['groupby_argsort_s']*1e3:.2f}ms -> "
+              f"1-sort {rec['groupby_scatter_s']*1e3:.2f}ms "
+              f"({rec['groupby_scatter_speedup']:.2f}x)")
+        for s in rec["louvain_phase_split"]:
+            print(f"    L{s['level']:02d} local_moving={s['local_moving_s']:.4f}s "
+                  f"aggregation={s['aggregation_s']:.4f}s "
+                  f"(agg share {s['aggregation_share']:.1%})")
+    _save("level_fusion", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -229,6 +268,7 @@ ALL = {
     "fig2_fig3": bench_fig2_fig3_louvain,
     "fig4": bench_fig4_strong_scaling,
     "sweep_fusion": bench_sweep_fusion,
+    "level_fusion": bench_level_fusion,
     "roofline": bench_roofline,
 }
 

@@ -19,8 +19,21 @@ backends.
 
 Matching the paper's own observation (§V-B: "the aggregation phase exhibits
 limited scalability due to its global communication requirements"), Louvain
-aggregation is executed as a global re-shuffle: gather the moved communities,
-coarsen once (jit), re-partition for the next level.
+aggregation comes in two flavors:
+
+  * per-level (``pipeline_fused=False``): a global host re-shuffle — gather
+    the moved communities, coarsen once (jit), re-partition for the next
+    level;
+  * pipeline-fused (``pipeline_fused=True``, default, DESIGN.md §Pipeline):
+    the LEVEL LOOP nests around the in-shard_map sweep loop.  Level 0
+    sweeps on the edge-balanced LOCAL shard (per-device compute ~m/D, same
+    as the per-level driver), then the shard is all-gathered ONCE into a
+    replicated list on which coarsening is a redundant groupby recompute
+    and coarse levels sweep under static dst-range ownership.  The
+    community count is collectively merged (``pmax``) so the Alg. 3
+    convergence predicate is identical on every device, and all devices
+    step through levels in lockstep with ZERO host syncs until the single
+    final readback.
 
 The same code runs 8 fake CPU devices (tests) or a 512-chip pod mesh
 (launch/dryrun.py lowers it for the production mesh).
@@ -28,6 +41,7 @@ The same code runs 8 fake CPU devices (tests) or a 512-chip pod mesh
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import Tuple
 
 import jax
@@ -36,7 +50,9 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import aggregation
-from repro.core.engine import EngineSpec, make_distributed_phase
+from repro.core.engine import (EngineSpec, make_distributed_phase,
+                               make_distributed_step, phase_loop,
+                               shard_map_compat)
 from repro.core.modularity import modularity
 from repro.graph.partition import EdgePartition, partition_edges_by_dst
 from repro.graph.structure import Graph
@@ -109,6 +125,146 @@ class DistLouvainResult:
     levels: int
     modularity: float
     timer: Timer
+    sweeps_per_level: list = dataclasses.field(default_factory=list)
+    n_comm_per_level: list = dataclasses.field(default_factory=list)
+
+
+@lru_cache(maxsize=None)
+def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
+                              spec: EngineSpec, max_levels: int):
+    """Build the jitted whole-run distributed pipeline (DESIGN.md §Pipeline).
+
+    The level loop runs INSIDE the shard_map worker, nested around the
+    engine's fused sweep loop, mirroring the single-device pipeline's
+    peeled-level-0 structure:
+
+      * LEVEL 0 (the dominant level) sweeps on the device's LOCAL edge
+        shard from the host edge-balanced partitioner — per-device compute
+        stays ~m/D, exactly like the per-level driver;
+      * the shard is then ``all_gather``-ed ONCE into the replicated
+        ``m_total = D·m_pad`` edge list; aggregation reuses the jitted
+        ``aggregation.coarsen_graph`` on it (identical on every device, no
+        re-shuffle), and coarse levels — orders of magnitude smaller —
+        sweep on the replicated list masked by a static contiguous
+        dst-range ownership (``ceil(n/D)`` vertices per device, so the
+        per-sweep psum merge stays a disjoint union);
+      * the community count is collectively merged (``lax.pmax``) so the
+        Alg. 3 ``n_comm == n_valid`` predicate is bitwise-identical on all
+        devices and the level loop exits in lockstep;
+      * per-level sweep/community-count histories live in ``-1``-sentinel
+        device buffers, read back once after the single dispatch.
+
+    Returns ``pipeline(src, dst, w, edge_mask, seed, n_valid) ->
+    (labels, n_final, levels, modularity, sweeps_hist, ncomm_hist)`` with
+    ``src..edge_mask`` the (D, m_pad) partition arrays.
+    """
+    axes = tuple(mesh.axis_names)
+    espec, rspec = P(axes), P()
+    D = int(mesh.devices.size)
+    m_total = D * m_pad       # static capacity of the gathered edge list
+    stride = -(-n // D)       # static coarse-ownership dst-range width
+
+    def worker(src_l, dst_l, w_l, emask_l, seed, n_valid0):
+        src_l, dst_l, w_l, emask_l = (src_l[0], dst_l[0], w_l[0], emask_l[0])
+        # linear device index over the (possibly multi-axis) mesh
+        d = jnp.int32(0)
+        for ax in axes:
+            d = d * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+        lo = d * stride
+        hi = jnp.minimum(lo + stride, n)
+        arange_n = jnp.arange(n, dtype=jnp.int32)
+        n_valid0 = n_valid0.astype(jnp.int32)
+
+        def sweep(src, dst, w, emask, own, vmask, level_u32):
+            """One fused local-moving phase over the given edge arrays."""
+            w_m = jnp.where(emask, w, 0.0)
+            deg = jax.lax.psum(jax.ops.segment_sum(
+                jnp.where(own, w, 0.0), jnp.clip(src, 0, n - 1),
+                num_segments=n), axes)
+            vol_v = jnp.sum(deg)
+            step = make_distributed_step(
+                spec, axes, n, src, dst, w, own, deg, vol_v, vmask)
+            com, _, sweeps, _dn, _act = phase_loop(
+                step, arange_n, vmask, level_u32 * jnp.uint32(1000), seed,
+                spec.max_sweeps, spec.threshold)
+            return com, sweeps.astype(jnp.int32)
+
+        def aggregate(cur: Graph, com, assign):
+            """remap + pmax'd convergence + coarsen (shared jitted helper)."""
+            vmask = cur.vertex_mask()
+            new_com, n_comm = aggregation.remap_communities(com, vmask)
+            n_comm = jax.lax.pmax(n_comm, axes)  # lockstep collective merge
+            done = n_comm == cur.n_valid         # Alg. 3 l.6, on device
+            macro = new_com[jnp.clip(assign, 0, n - 1)]
+
+            def advance(_):
+                cg = aggregation.coarsen_graph(cur, new_com, n_comm)
+                nown = cg.edge_mask & (cg.dst >= lo) & (cg.dst < hi)
+                return (cg.src, cg.dst, cg.w, cg.edge_mask, nown,
+                        cg.n_valid, cg.m_valid, macro)
+
+            def stay(_):
+                return (cur.src, cur.dst, cur.w, cur.edge_mask,
+                        jnp.zeros((m_total,), bool), cur.n_valid,
+                        cur.m_valid, assign)
+
+            nxt = jax.lax.cond(done, stay, advance, None)
+            return nxt + (macro, n_comm, done)
+
+        # ---- peeled level 0: sweep on the LOCAL edge-balanced shard
+        com0, sweeps0 = sweep(src_l, dst_l, w_l, emask_l, emask_l,
+                              arange_n < n_valid0, jnp.uint32(0))
+        # gather the shard ONCE into the replicated full-capacity list
+        gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
+        src_f, dst_f, w_f, emask_f = (gather(src_l), gather(dst_l),
+                                      gather(w_l), gather(emask_l))
+        g_full = Graph(src=src_f, dst=dst_f, w=w_f, edge_mask=emask_f,
+                       n_valid=n_valid0,
+                       m_valid=jnp.sum(emask_f.astype(jnp.int32)),
+                       n_max=n, m_max=m_total, sorted_by=None)
+        (src, dst, w, fullmask, own, n_valid, m_valid, assign, macro,
+         n_comm, done) = aggregate(g_full, com0, arange_n)
+
+        sweeps_hist = jnp.full((max_levels,), -1, jnp.int32).at[0].set(sweeps0)
+        ncomm_hist = jnp.full((max_levels,), -1, jnp.int32).at[0].set(n_comm)
+
+        # ---- coarse levels: replicated list, dst-range ownership masks
+        def cond(c):
+            level, done = c[0], c[1]
+            return (level < max_levels) & (~done)
+
+        def body(c):
+            (level, _done, src, dst, w, fullmask, own_l, n_valid, m_valid,
+             assign, _macro, sh, nh) = c
+            cur = Graph(src=src, dst=dst, w=w, edge_mask=fullmask,
+                        n_valid=n_valid, m_valid=m_valid, n_max=n,
+                        m_max=m_total, sorted_by=None)
+            com, sweeps = sweep(src, dst, w, fullmask, own_l,
+                                cur.vertex_mask(), level.astype(jnp.uint32))
+            (src2, dst2, w2, fm2, own2, nv2, mv2, assign2, macro2, n_comm,
+             done2) = aggregate(cur, com, assign)
+            sh = sh.at[level].set(sweeps)
+            nh = nh.at[level].set(n_comm)
+            return (level + 1, done2, src2, dst2, w2, fm2, own2, nv2, mv2,
+                    assign2, macro2, sh, nh)
+
+        carry = (jnp.int32(1), done, src, dst, w, fullmask, own, n_valid,
+                 m_valid, assign, macro, sweeps_hist, ncomm_hist)
+        carry = jax.lax.while_loop(cond, body, carry)
+        (levels, _, _, _, _, _, _, _, _, _, macro, sweeps_hist,
+         ncomm_hist) = carry
+
+        final, n_final = aggregation.remap_communities(
+            macro, arange_n < n_valid0)
+        q = modularity(g_full, final)
+        return final, n_final, levels, q, sweeps_hist, ncomm_hist
+
+    sharded = shard_map_compat(
+        worker, mesh,
+        in_specs=(espec,) * 4 + (rspec,) * 2,
+        out_specs=(rspec,) * 6,
+    )
+    return jax.jit(sharded)
 
 
 def distributed_louvain(
@@ -120,14 +276,10 @@ def distributed_louvain(
     seed: int = 0,
     move_prob: float = 0.5,
     singleton_rule: bool = True,
+    pipeline_fused: bool = True,
 ) -> DistLouvainResult:
     timer = Timer()
     n = g.n_max
-    g0 = g
-    assign = jnp.arange(n, dtype=jnp.int32)
-    cur = g
-    levels = 0
-
     spec = EngineSpec(
         evaluator="louvain",
         backend="distributed",
@@ -136,6 +288,35 @@ def distributed_louvain(
         move_prob=move_prob,
         singleton_rule=singleton_rule,
     )
+
+    if pipeline_fused:
+        with timer.phase("partition"):
+            part = partition_edges_by_dst(g, mesh.devices.size)
+            src, dst, w, emask = shard_edges(part, mesh)
+        pipe = make_distributed_pipeline(mesh, n, part.m_pad, spec,
+                                         max_levels)
+        with timer.phase("pipeline"):
+            out = pipe(src, dst, w, emask, jnp.uint32(seed), g.n_valid)
+            (final, n_final, levels, q, sweeps_hist,
+             ncomm_hist) = jax.device_get(out)   # the ONE readback
+        levels = int(levels)
+        return DistLouvainResult(
+            labels=np.asarray(final),
+            n_communities=int(n_final),
+            levels=levels,
+            modularity=float(q),
+            timer=timer,
+            sweeps_per_level=[int(x) for x in sweeps_hist[:levels]],
+            n_comm_per_level=[int(x) for x in ncomm_hist[:levels]],
+        )
+
+    g0 = g
+    assign = jnp.arange(n, dtype=jnp.int32)
+    cur = g
+    levels = 0
+    sweeps_per_level: list = []
+    n_comm_per_level: list = []
+
     phase = make_distributed_phase(mesh, n, spec)
     for level in range(max_levels):
         with timer.phase("partition"):
@@ -145,13 +326,15 @@ def distributed_louvain(
         need = cur.vertex_mask()
         with timer.phase("local_moving"):
             # one fused phase per level: while_loop inside the shard_map
-            com, need, _, _, _ = phase(
+            com, need, sweeps, _, _ = phase(
                 src, dst, w, emask, com, need,
                 jnp.uint32(level * 1000), jnp.uint32(seed),
                 cur.weighted_degrees(), cur.total_volume(), cur.n_valid,
             )
+        sweeps_per_level.append(int(sweeps))
         with timer.phase("aggregation"):
             new_com, n_comm = aggregation.remap_communities(com, cur.vertex_mask())
+            n_comm_per_level.append(int(n_comm))
             done = int(n_comm) == int(cur.n_valid)
             if not done:
                 assign = new_com[jnp.clip(assign, 0, n - 1)]
@@ -168,4 +351,6 @@ def distributed_louvain(
         levels=levels,
         modularity=q,
         timer=timer,
+        sweeps_per_level=sweeps_per_level,
+        n_comm_per_level=n_comm_per_level,
     )

@@ -236,7 +236,7 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
 # ----------------------------------------------------------------- step / loop
 
 
-def _make_step(spec: EngineSpec, g: Graph, ell, restrict):
+def make_step(spec: EngineSpec, g: Graph, ell, restrict):
     """Build the shared sweep step: evaluate → gate → adopt → frontier."""
     n = g.n_max
     mult, salt = _GATE_CONST[spec.evaluator]
@@ -264,7 +264,7 @@ def _make_step(spec: EngineSpec, g: Graph, ell, restrict):
     return step
 
 
-def _phase_loop(step, labels, active, it0, seed, max_sweeps: int, threshold: int):
+def phase_loop(step, labels, active, it0, seed, max_sweeps: int, threshold: int):
     """The fused convergence loop: run ``step`` until ΔN ≤ threshold or the
     sweep budget is exhausted, entirely on device.  Returns
     (labels, active, sweeps, dn_hist[max_sweeps], act_hist[max_sweeps])."""
@@ -292,6 +292,21 @@ def _phase_loop(step, labels, active, it0, seed, max_sweeps: int, threshold: int
     return labels, active, s, dn_hist, act_hist
 
 
+def device_phase(spec: EngineSpec, g: Graph, ell, labels, active, it0, seed,
+                 restrict=None):
+    """Trace one fused local-moving phase for embedding in a LARGER jitted
+    program (e.g. the multi-level pipeline, DESIGN.md §Pipeline).
+
+    Must be called under an enclosing trace/jit; returns the raw loop outputs
+    ``(labels, active, sweeps, dn_hist, act_hist)`` with everything device-
+    resident.  ``SweepEngine.run_phase`` is the standalone-dispatch wrapper
+    around the same loop.
+    """
+    step = make_step(spec, g, ell, restrict)
+    return phase_loop(step, labels, active, it0, seed,
+                      spec.max_sweeps, spec.threshold)
+
+
 def _donate_labels() -> bool:
     """Buffer donation for the label/frontier arrays in the fused call.
 
@@ -303,9 +318,7 @@ def _donate_labels() -> bool:
 @lru_cache(maxsize=None)
 def _fused_phase_fn(spec: EngineSpec, donate: bool):
     def phase(g, ell, labels, active, it0, seed, restrict):
-        step = _make_step(spec, g, ell, restrict)
-        return _phase_loop(step, labels, active, it0, seed,
-                           spec.max_sweeps, spec.threshold)
+        return device_phase(spec, g, ell, labels, active, it0, seed, restrict)
 
     return jax.jit(phase, donate_argnums=(2, 3) if donate else ())
 
@@ -313,7 +326,7 @@ def _fused_phase_fn(spec: EngineSpec, donate: bool):
 @lru_cache(maxsize=None)
 def _step_fn(spec: EngineSpec):
     def one_sweep(g, ell, labels, active, it, seed, restrict):
-        return _make_step(spec, g, ell, restrict)(labels, active, it, seed)
+        return make_step(spec, g, ell, restrict)(labels, active, it, seed)
 
     return jax.jit(one_sweep)
 
@@ -413,6 +426,65 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
                       check_rep=False)
 
 
+def make_distributed_step(spec: EngineSpec, axes, n: int, src, dst, w, emask,
+                          deg, vol_v, vmask):
+    """Build one sweep step over a LOCAL edge shard (for use inside a
+    shard_map worker): evaluate on local in-edges, psum-merge the disjoint
+    per-owner proposals, gate, adopt, frontier.
+
+    ``emask`` is the per-device ownership mask: every vertex's in-edges must
+    be owned by exactly one device (dst-disjoint ownership), so the psum
+    merge is a pure union.  ``deg``/``vol_v`` are the per-level Louvain
+    invariants (ignored by PLP).  Reused by both the per-level distributed
+    phase and the fused multi-level pipeline (DESIGN.md §Pipeline).
+    """
+    mult, salt = _GATE_CONST[spec.evaluator]
+
+    def evaluate(labels, active, it, seed):
+        valid = emask & active[jnp.clip(dst, 0, n - 1)]
+        if spec.evaluator == "plp":
+            noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
+            best_score, best_lab, cur_score = moves.plp_best_labels(
+                src, dst, w, valid, labels, n, noise_it, seed, spec.tie_eps)
+            propose_l = active & (best_lab >= 0) & (best_score > cur_score)
+            proposal_l = best_lab
+        else:
+            # replicated O(n) recompute — identical on all devices, no comm
+            vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+            best_gain, best_cand = moves.louvain_best_moves(
+                src, dst, w, valid, labels, deg, vol_com, size_com, vol_v,
+                n, singleton_rule=spec.singleton_rule)
+            propose_l = active & (best_cand >= 0) & (best_gain > 0.0)
+            proposal_l = best_cand
+        # disjoint-owner merge: every vertex's in-edges live on one device
+        merged = jax.lax.psum(
+            jnp.where(propose_l, proposal_l, 0).astype(jnp.int32), axes)
+        propose = jax.lax.psum(propose_l.astype(jnp.int32), axes) > 0
+        return jnp.where(propose, merged, -1), propose
+
+    def frontier(changed):
+        contrib = jnp.where(
+            emask, changed[jnp.clip(src, 0, n - 1)].astype(jnp.int32), 0)
+        nbr_local = jax.ops.segment_sum(
+            contrib, jnp.clip(dst, 0, n - 1), num_segments=n)
+        return changed | (jax.lax.psum(nbr_local, axes) > 0)
+
+    def step(labels, active, it, seed):
+        proposal, propose = evaluate(labels, active, it, seed)
+        adopt = propose
+        if spec.move_prob < 1.0:
+            adopt = adopt & luby_move_gate(
+                n, it, seed, spec.move_prob, mult, salt)
+        new_labels = jnp.where(adopt, proposal, labels)
+        changed = adopt & (new_labels != labels)
+        delta_n = jnp.sum(changed.astype(jnp.int32))
+        next_active = frontier(changed) if spec.use_frontier else vmask
+        return new_labels, next_active, delta_n
+
+    return step
+
+
+@lru_cache(maxsize=None)
 def make_distributed_phase(mesh, n: int, spec: EngineSpec):
     """Build the jitted fused phase for edge-partitioned shards.
 
@@ -424,61 +496,22 @@ def make_distributed_phase(mesh, n: int, spec: EngineSpec):
     Returns ``phase(src, dst, w, emask, labels, active, it0, seed, deg,
     vol_v, n_valid) -> (labels, active, sweeps, dn_hist, act_hist)``.
     ``deg``/``vol_v`` are the per-level Louvain invariants (ignored by PLP).
+    Cached per (mesh, n, spec) so repeated driver calls reuse the compiled
+    phase instead of retracing a fresh closure.
     """
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(mesh.axis_names)
     espec, rspec = P(axes), P()
-    mult, salt = _GATE_CONST[spec.evaluator]
 
     def worker(src, dst, w, emask, labels, active, it0, seed, deg, vol_v,
                n_valid):
         src, dst, w, emask = src[0], dst[0], w[0], emask[0]
         vmask = jnp.arange(n, dtype=jnp.int32) < n_valid
-
-        def evaluate(labels, active, it):
-            valid = emask & active[jnp.clip(dst, 0, n - 1)]
-            if spec.evaluator == "plp":
-                noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
-                best_score, best_lab, cur_score = moves.plp_best_labels(
-                    src, dst, w, valid, labels, n, noise_it, seed, spec.tie_eps)
-                propose_l = active & (best_lab >= 0) & (best_score > cur_score)
-                proposal_l = best_lab
-            else:
-                # replicated O(n) recompute — identical on all devices, no comm
-                vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
-                best_gain, best_cand = moves.louvain_best_moves(
-                    src, dst, w, valid, labels, deg, vol_com, size_com, vol_v,
-                    n, singleton_rule=spec.singleton_rule)
-                propose_l = active & (best_cand >= 0) & (best_gain > 0.0)
-                proposal_l = best_cand
-            # disjoint-owner merge: every vertex's in-edges live on one device
-            merged = jax.lax.psum(
-                jnp.where(propose_l, proposal_l, 0).astype(jnp.int32), axes)
-            propose = jax.lax.psum(propose_l.astype(jnp.int32), axes) > 0
-            return jnp.where(propose, merged, -1), propose
-
-        def frontier(changed):
-            contrib = jnp.where(
-                emask, changed[jnp.clip(src, 0, n - 1)].astype(jnp.int32), 0)
-            nbr_local = jax.ops.segment_sum(
-                contrib, jnp.clip(dst, 0, n - 1), num_segments=n)
-            return changed | (jax.lax.psum(nbr_local, axes) > 0)
-
-        def step(labels, active, it, seed):
-            proposal, propose = evaluate(labels, active, it)
-            adopt = propose
-            if spec.move_prob < 1.0:
-                adopt = adopt & luby_move_gate(
-                    n, it, seed, spec.move_prob, mult, salt)
-            new_labels = jnp.where(adopt, proposal, labels)
-            changed = adopt & (new_labels != labels)
-            delta_n = jnp.sum(changed.astype(jnp.int32))
-            next_active = frontier(changed) if spec.use_frontier else vmask
-            return new_labels, next_active, delta_n
-
-        return _phase_loop(step, labels, active, it0, seed,
-                           spec.max_sweeps, spec.threshold)
+        step = make_distributed_step(
+            spec, axes, n, src, dst, w, emask, deg, vol_v, vmask)
+        return phase_loop(step, labels, active, it0, seed,
+                          spec.max_sweeps, spec.threshold)
 
     sharded = shard_map_compat(
         worker, mesh,

@@ -12,16 +12,28 @@ Adaptations (DESIGN.md §2 / §8): atomic volCom updates (l.18-19) become a
 segment-sum recompute at each synchronous sweep; the Lu–Halappanavar singleton
 tie-break suppresses the classic PLM two-singleton swap oscillation.
 
-The sweep machinery lives in the shared ``core.engine`` (DESIGN.md §Engine):
-this module configures the ``louvain`` evaluator, runs one fused local-moving
-phase per level (a single jitted ``lax.while_loop`` call with on-device
-ΔN ≤ threshold convergence — at most one host transfer per level), and owns
-the level loop: aggregation, optional Leiden-style refinement, bookkeeping.
+The sweep machinery lives in the shared ``core.engine`` (DESIGN.md §Engine).
+With ``pipeline_fused=True`` (default) the ENTIRE level loop — fused
+local-moving phase → remap → coarsen → modularity accounting, plus the
+optional Leiden refinement phase — runs as one jitted ``lax.while_loop`` over
+levels with the Alg. 3 ``|C| == |V|`` convergence predicate evaluated on
+device: a whole Louvain/Leiden run is ONE dispatch with ONE host readback at
+the end (DESIGN.md §Pipeline).  Per-level modularity / sweep-count /
+community-count histories are written into fixed-size on-device buffers
+(``-1`` / NaN sentinels) and reconstructed from that single transfer.
+
+``pipeline_fused=False`` keeps the per-level Python driver (one fused
+local-moving dispatch per level, aggregation and convergence check on host)
+with a bit-for-bit parity contract against the fused pipeline, enforced by
+``tests/test_pipeline.py``.  The ``ell``/``pallas`` backends apply to the
+finest (level-0) graph only; coarse levels use the ``segment`` evaluator in
+BOTH drivers — see DESIGN.md §Pipeline for the rule.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+from functools import lru_cache
 from typing import Optional
 
 import jax
@@ -30,7 +42,7 @@ import numpy as np
 
 from repro.config import ConfigBase
 from repro.core import aggregation
-from repro.core.engine import EngineSpec, SweepEngine
+from repro.core.engine import EngineSpec, SweepEngine, device_phase
 from repro.core.modularity import modularity
 from repro.graph.structure import Graph
 from repro.utils.timing import Timer
@@ -48,12 +60,31 @@ class LouvainConfig(ConfigBase):
     seed: int = 0
     track_modularity: bool = True
     fused: bool = True          # one while_loop per level vs per-sweep dispatch
+    # Whole-run fusion (DESIGN.md §Pipeline): the level loop itself becomes a
+    # lax.while_loop, so louvain()/leiden() is one dispatch + one readback.
+    # Requires fused sweeps; with fused=False the per-level driver runs.
+    pipeline_fused: bool = True
     # Leiden-style refinement (beyond paper; the paper cites Leiden [30] as
     # the natural next algorithm): refine each community into well-connected
     # sub-communities before aggregation, then seed the next level with the
     # macro partition instead of singletons.
     refine: bool = False
     refine_sweeps: int = 8
+    # Per-level driver only: record additional L<level>/<phase> timer entries
+    # (the paper-style fig4 phase split used by `benchmarks/run.py
+    # level_fusion`).
+    per_level_timing: bool = False
+
+    def __post_init__(self):
+        if self.max_levels < 1:
+            raise ValueError(
+                f"max_levels must be >= 1, got {self.max_levels}")
+        if not (0.0 < self.move_prob <= 1.0):
+            raise ValueError(
+                f"move_prob must be in (0, 1], got {self.move_prob}")
+        if self.refine_sweeps < 1:
+            raise ValueError(
+                f"refine_sweeps must be >= 1, got {self.refine_sweeps}")
 
 
 @dataclasses.dataclass
@@ -65,6 +96,8 @@ class LouvainResult:
     modularity_history: list      # per level
     sweeps_per_level: list
     timer: Timer
+    n_comm_per_level: list = dataclasses.field(default_factory=list)
+    delta_n_per_level: list = dataclasses.field(default_factory=list)
 
 
 def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
@@ -80,6 +113,194 @@ def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
     )
 
 
+def _coarse_backend(backend: str) -> str:
+    """DESIGN.md §Pipeline: the ELL layout is built host-side for the finest
+    graph only; every coarse level runs the segment evaluator (in both the
+    fused pipeline and the per-level driver, so they stay bit-identical)."""
+    return "segment" if backend in ("ell", "pallas") else backend
+
+
+def _refine_spec(cfg: LouvainConfig) -> EngineSpec:
+    return engine_spec(cfg, backend="segment",
+                       max_sweeps=cfg.refine_sweeps).replace(threshold=0)
+
+
+# ------------------------------------------------------------ transfer hook
+
+_transfer_count = 0   # incremented on every pipeline readback (test hook)
+
+
+def _readback(tree):
+    """The ONE device→host transfer of the fused pipeline.
+
+    Every host materialization in the ``pipeline_fused`` path flows through
+    this function, so tests can count transfers by monkeypatching it (or by
+    reading ``_transfer_count``)."""
+    global _transfer_count
+    _transfer_count += 1
+    return jax.device_get(tree)
+
+
+# ------------------------------------------------------------ fused pipeline
+
+
+def _graph_arrays(g: Graph):
+    return (g.src, g.dst, g.w, g.edge_mask, g.n_valid, g.m_valid)
+
+
+@lru_cache(maxsize=None)
+def _pipeline_fn(spec0: EngineSpec, spec_coarse: EngineSpec,
+                 refine_spec: Optional[EngineSpec], max_levels: int,
+                 track_modularity: bool):
+    """Build the jitted whole-run pipeline (DESIGN.md §Pipeline).
+
+    Level 0 is peeled out of the loop (it may use the ELL backend and always
+    starts from singletons); levels >= 1 run inside a ``lax.while_loop`` with
+    the Alg. 3 ``n_comm == n_valid`` predicate on device.  Histories are
+    fixed-size on-device buffers: ``modularity[max_levels]`` (NaN sentinel),
+    ``sweeps/n_comm[max_levels]`` and ``delta_n[max_levels, max_sweeps]``
+    (``-1`` sentinel, the PR-1 convention).
+    """
+
+    def pipeline(g: Graph, ell, g0: Graph, seed):
+        n = g.n_max
+        arange_n = jnp.arange(n, dtype=jnp.int32)
+
+        def run_level(cur: Graph, assign, init_com, level_u32, spec, ell):
+            """One level: fused local-moving → remap → (refine) → coarsen.
+
+            Mirrors one iteration of the per-level driver exactly; returns
+            the next level's graph arrays + bookkeeping and this level's
+            history entries."""
+            vmask = cur.vertex_mask()
+            it0 = level_u32 * jnp.uint32(1000)
+            com, _, sweeps, dn_h, _act_h = device_phase(
+                spec, cur, ell, init_com, vmask, it0, seed)
+            new_com, n_comm = aggregation.remap_communities(com, vmask)
+            macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
+            done = n_comm == cur.n_valid           # Alg. 3 l.6 convergence
+            q = (modularity(g0, macro_assign) if track_modularity
+                 else jnp.float32(0.0))
+
+            def advance(_):
+                if refine_spec is not None:
+                    # Leiden: aggregate by the REFINED partition; seed the
+                    # next level's local-moving with each super-vertex's
+                    # macro id (paper-order: refinement only when not done)
+                    ref, _, _, _, _ = device_phase(
+                        refine_spec, cur, None, arange_n, vmask,
+                        it0 + jnp.uint32(500), seed, restrict=com)
+                    new_ref, n_ref = aggregation.remap_communities(ref, vmask)
+                    macro_of_ref = jax.ops.segment_max(
+                        jnp.where(vmask, com, -1),
+                        jnp.clip(new_ref, 0, n - 1), num_segments=n)
+                    nxt = aggregation.coarsen_graph(cur, new_ref, n_ref)
+                    return (_graph_arrays(nxt),
+                            new_ref[jnp.clip(assign, 0, n - 1)],
+                            jnp.clip(macro_of_ref, 0, n - 1).astype(jnp.int32))
+                nxt = aggregation.coarsen_graph(cur, new_com, n_comm)
+                return _graph_arrays(nxt), macro_assign, arange_n
+
+            def stay(_):
+                return _graph_arrays(cur), assign, init_com
+
+            nxt_arrays, assign2, init2 = jax.lax.cond(done, stay, advance,
+                                                      None)
+            return (nxt_arrays, assign2, init2, macro_assign,
+                    sweeps.astype(jnp.int32), dn_h, n_comm, q, done)
+
+        # fixed-size per-level history buffers, one readback at the end
+        mod_hist = jnp.full((max_levels,), jnp.nan, jnp.float32)
+        sweeps_hist = jnp.full((max_levels,), -1, jnp.int32)
+        ncomm_hist = jnp.full((max_levels,), -1, jnp.int32)
+        dn_hist = jnp.full((max_levels, spec_coarse.max_sweeps), -1, jnp.int32)
+
+        # peeled level 0: the only level that may use the ELL/Pallas backend
+        (arrays, assign, init_com, macro, sweeps, dn_h, n_comm, q,
+         done) = run_level(g, arange_n, arange_n, jnp.uint32(0), spec0, ell)
+        mod_hist = mod_hist.at[0].set(q)
+        sweeps_hist = sweeps_hist.at[0].set(sweeps)
+        ncomm_hist = ncomm_hist.at[0].set(n_comm)
+        dn_hist = dn_hist.at[0].set(dn_h)
+
+        def cond(c):
+            level, done = c[0], c[1]
+            return (level < max_levels) & (~done)
+
+        def body(c):
+            (level, _done, arrays, assign, init_com, _macro,
+             mh, sh, nh, dh) = c
+            src, dst, w, em, nv, mv = arrays
+            cur = Graph(src=src, dst=dst, w=w, edge_mask=em, n_valid=nv,
+                        m_valid=mv, n_max=g.n_max, m_max=g.m_max,
+                        sorted_by=None)
+            (arrays2, assign2, init2, macro2, sweeps, dn_h, n_comm, q,
+             done2) = run_level(cur, assign, init_com,
+                                level.astype(jnp.uint32), spec_coarse, None)
+            mh = mh.at[level].set(q)
+            sh = sh.at[level].set(sweeps)
+            nh = nh.at[level].set(n_comm)
+            dh = dh.at[level].set(dn_h)
+            return (level + 1, done2, arrays2, assign2, init2, macro2,
+                    mh, sh, nh, dh)
+
+        carry = (jnp.int32(1), done, arrays, assign, init_com, macro,
+                 mod_hist, sweeps_hist, ncomm_hist, dn_hist)
+        carry = jax.lax.while_loop(cond, body, carry)
+        (levels, _, _, _, _, macro, mod_hist, sweeps_hist, ncomm_hist,
+         dn_hist) = carry
+
+        final_assign, n_final = aggregation.remap_communities(
+            macro, g0.vertex_mask())
+        q_final = modularity(g0, final_assign)
+        return (final_assign, n_final, levels, q_final,
+                mod_hist, sweeps_hist, ncomm_hist, dn_hist)
+
+    return jax.jit(pipeline)
+
+
+def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
+                      g_original: Optional[Graph]) -> LouvainResult:
+    """Whole-run fused driver: ONE dispatch, ONE readback (``_readback``)."""
+    timer = Timer()
+    g0 = g_original if g_original is not None else g
+    spec0 = engine_spec(cfg)
+    spec_coarse = engine_spec(cfg, backend=_coarse_backend(cfg.backend))
+    refine_spec = _refine_spec(cfg) if cfg.refine else None
+
+    ell = None
+    if cfg.backend in ("ell", "pallas"):
+        from repro.graph import ell as ell_mod
+
+        with timer.phase("ell_build"):
+            ell = ell_mod.build_device_ell(g)
+
+    fn = _pipeline_fn(spec0, spec_coarse, refine_spec, cfg.max_levels,
+                      cfg.track_modularity)
+    with timer.phase("pipeline"):
+        out = fn(g, ell, g0, jnp.uint32(cfg.seed))
+        (final_assign, n_final, levels, q, mod_hist, sweeps_hist,
+         ncomm_hist, dn_hist) = _readback(out)
+
+    levels = int(levels)
+    sweeps_per_level = [int(s) for s in sweeps_hist[:levels]]
+    return LouvainResult(
+        labels=np.asarray(final_assign),
+        n_communities=int(n_final),
+        levels=levels,
+        modularity=float(q),
+        modularity_history=(
+            [float(x) for x in mod_hist[:levels]]
+            if cfg.track_modularity else []),
+        sweeps_per_level=sweeps_per_level,
+        timer=timer,
+        n_comm_per_level=[int(x) for x in ncomm_hist[:levels]],
+        delta_n_per_level=[
+            [int(x) for x in row[:s]]
+            for row, s in zip(dn_hist[:levels], sweeps_per_level)],
+    )
+
+
 # ------------------------------------------------------------ refinement
 
 
@@ -88,9 +309,7 @@ def _refine_partition(cur: Graph, com_macro: jax.Array, cfg: LouvainConfig,
     """Leiden refinement: greedy modularity merges restricted to the macro
     communities, starting from singletons.  Guarantees every aggregated
     super-vertex is contained in (and connected within) a macro community."""
-    spec = engine_spec(cfg, backend="segment",
-                       max_sweeps=cfg.refine_sweeps).replace(threshold=0)
-    engine = SweepEngine(cur, spec)
+    engine = SweepEngine(cur, _refine_spec(cfg))
     res = engine.run_phase(
         *engine.singleton_state(),
         it0=level * 1000 + 500, seed=cfg.seed,
@@ -108,21 +327,48 @@ def leiden(g: Graph, cfg: LouvainConfig = LouvainConfig(),
     return louvain(g, cfg.replace(refine=True), g_original)
 
 
-def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), g_original: Optional[Graph] = None) -> LouvainResult:
+def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(),
+            g_original: Optional[Graph] = None) -> LouvainResult:
+    if cfg.pipeline_fused and cfg.fused:
+        return _louvain_pipeline(g, cfg, g_original)
+    return _louvain_per_level(g, cfg, g_original)
+
+
+def _tphase(timer: Timer, name: str, level: int, per_level: bool):
+    """timer.phase(name), optionally doubled with a level-tagged entry."""
+    if not per_level:
+        return timer.phase(name)
+    stack = contextlib.ExitStack()
+    stack.enter_context(timer.phase(name))
+    stack.enter_context(timer.phase(f"L{level:02d}/{name}"))
+    return stack
+
+
+def _louvain_per_level(g: Graph, cfg: LouvainConfig,
+                       g_original: Optional[Graph]) -> LouvainResult:
+    """Per-level Python driver (``pipeline_fused=False``): one fused
+    local-moving dispatch per level, aggregation + Alg. 3 convergence on
+    host.  Bit-for-bit parity with the fused pipeline is contractual
+    (tests/test_pipeline.py) — any change here must be mirrored in
+    ``_pipeline_fn`` and vice versa."""
     timer = Timer()
     g0 = g_original if g_original is not None else g
     n = g.n_max
-    spec = engine_spec(cfg)
 
     assign = jnp.arange(n, dtype=jnp.int32)  # original vertex -> community
     cur = g
     mod_hist: list = []
     sweeps_per_level: list = []
+    n_comm_per_level: list = []
+    delta_n_per_level: list = []
     levels = 0
 
     init_com = None   # Leiden: macro partition seeds the next level
     for level in range(cfg.max_levels):
-        with timer.phase("ell_build") if cfg.backend in ("ell", "pallas") \
+        spec = engine_spec(
+            cfg, backend=cfg.backend if level == 0
+            else _coarse_backend(cfg.backend))
+        with timer.phase("ell_build") if spec.backend in ("ell", "pallas") \
                 else contextlib.nullcontext():
             engine = SweepEngine(cur, spec)
         com = (jnp.arange(n, dtype=jnp.int32)  # singleton init (Alg. 2 l.4)
@@ -132,24 +378,26 @@ def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), g_original: Optional
 
         # ONE fused while_loop call per level (DESIGN.md §Engine): the whole
         # local-moving phase converges on device before anything syncs back
-        with timer.phase("local_moving"):
+        with _tphase(timer, "local_moving", level, cfg.per_level_timing):
             res = engine.run_phase(
                 com, need, it0=level * 1000, seed=cfg.seed, fused=cfg.fused)
         com = res.labels
         sweeps_per_level.append(res.sweeps)
+        delta_n_per_level.append(res.delta_n_history)
 
-        with timer.phase("aggregation"):
+        with _tphase(timer, "aggregation", level, cfg.per_level_timing):
             new_com, n_comm = aggregation.remap_communities(com, cur.vertex_mask())
             # macro labels on ORIGINAL vertices (the result partition); under
             # refinement `assign` tracks the finer refined chain instead
             macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
             n_comm_i = int(n_comm)
             n_valid_i = int(cur.n_valid)
+            n_comm_per_level.append(n_comm_i)
             done = n_comm_i == n_valid_i          # Alg. 3 l.6 convergence
             if not done and cfg.refine:
                 # Leiden: aggregate by the REFINED partition; seed the next
                 # level's local-moving with each super-vertex's macro id
-                with timer.phase("refinement"):
+                with _tphase(timer, "refinement", level, cfg.per_level_timing):
                     ref = _refine_partition(cur, com, cfg, level)
                 new_ref, n_ref = aggregation.remap_communities(
                     ref, cur.vertex_mask())
@@ -180,4 +428,6 @@ def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), g_original: Optional
         modularity_history=mod_hist,
         sweeps_per_level=sweeps_per_level,
         timer=timer,
+        n_comm_per_level=n_comm_per_level,
+        delta_n_per_level=delta_n_per_level,
     )

@@ -6,6 +6,13 @@ bucket, neighbor ids/weights are dense (rows, W) tiles — ideal for VMEM
 BlockSpecs.  Vertices with deg > max(W) fall back to the sort+segment path
 (the "tail"), mirroring how high-degree hubs get special-cased in parallel
 community detection codes.
+
+The bucketing itself is a HOST-side build: row capacities are data-dependent
+(a jit-native rebuild would need n_max-row buckets per width), so the fused
+multi-level pipeline applies the ELL/Pallas evaluators to the finest
+(level-0) graph only and runs coarse levels through the segment evaluator —
+the documented fallback rule of DESIGN.md §Pipeline, mirrored by the
+per-level driver so both stay bit-identical.
 """
 from __future__ import annotations
 
@@ -66,7 +73,8 @@ def build_ell(
     np.add.at(deg_w, src, w)
 
     # Sort the FULL list by (dst, src) first: tail_edge_idx must index the
-    # same dst-sorted view that runtime code (plp._tail_move) reconstructs.
+    # same dst-sorted view that to_device reconstructs when it materializes
+    # the tail edge arrays.
     order = np.lexsort((src, dst))
     src, dst, w = src[order], dst[order], w[order]
     deg_full = np.zeros(n, dtype=np.int64)

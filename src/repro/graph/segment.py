@@ -37,11 +37,22 @@ def run_ids(starts: jax.Array) -> jax.Array:
 
 
 def groupby_sum(
-    keys: Sequence[jax.Array], values: jax.Array, valid: jax.Array | None = None
+    keys: Sequence[jax.Array],
+    values: jax.Array,
+    valid: jax.Array | None = None,
+    compact_via: str = "scatter",
 ) -> Tuple[Tuple[jax.Array, ...], jax.Array, jax.Array, jax.Array]:
     """GroupBy(keys).sum(values) with static output capacity.
 
     Invalid entries must already sort to the end (give them sentinel keys).
+
+    Compaction of run representatives to the front is a ``cumsum(starts)``
+    scatter/gather off the already-sorted runs (``compact_via="scatter"``,
+    default) — ONE ``lax.sort`` per call.  ``compact_via="argsort"`` keeps the
+    legacy second full sort for the aggregation benchmark comparison
+    (``benchmarks/run.py level_fusion``); the two agree bit-for-bit on the
+    first ``n_groups`` slots (slots beyond ``n_groups`` are unspecified and
+    must be masked with ``group_valid``).
 
     Returns (group_keys, group_sums, group_valid, n_groups):
       group_keys: one representative key tuple per run, COMPACTED to the front
@@ -60,13 +71,24 @@ def groupby_sum(
     starts = starts_all & svalid
     rid = run_ids(starts_all)
     sums = jax.ops.segment_sum(jnp.where(svalid, sv[0], 0.0), rid, num_segments=m)
-    # compact run representatives to the front
-    order = jnp.argsort(jnp.where(starts, 0, 1), stable=True)
-    group_keys = tuple(k[order] for k in skeys)
-    group_rids = rid[order]
-    group_sums = sums[group_rids]
     n_groups = jnp.sum(starts.astype(jnp.int32))
     group_valid = jnp.arange(m, dtype=jnp.int32) < n_groups
+    if compact_via == "scatter":
+        # Valid runs sort first, so the j-th valid run start has rid == j:
+        # scatter each start's position into output slot rid, then gather.
+        # Slots >= n_groups keep index 0 (arbitrary; masked by group_valid),
+        # and sums is already rid-indexed so it needs no gather at all.
+        pos = jnp.where(starts, rid, m)
+        idx = (jnp.zeros((m + 1,), jnp.int32)
+               .at[pos].set(jnp.arange(m, dtype=jnp.int32), mode="drop")[:m])
+        group_keys = tuple(k[idx] for k in skeys)
+        group_sums = sums
+    elif compact_via == "argsort":
+        order = jnp.argsort(jnp.where(starts, 0, 1), stable=True)
+        group_keys = tuple(k[order] for k in skeys)
+        group_sums = sums[rid[order]]
+    else:
+        raise ValueError(f"unknown compact_via {compact_via!r}")
     return group_keys, group_sums, group_valid, n_groups
 
 

@@ -1,0 +1,191 @@
+"""Aggregation edge cases + GroupBy compaction equivalence.
+
+Covers the paper's Alg. 3 aggregation phase where the pipeline loop leans on
+it hardest: all-intra partitions (coarse graph collapses to pure self-loops),
+all-invalid levels (masked-out graphs), and the one-sort scatter compaction
+in ``graph/segment.py::groupby_sum`` vs the legacy two-sort argsort path.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.core.modularity import modularity
+from repro.graph import segment as seg
+from repro.graph.builders import from_numpy_edges
+from repro.graph.generators import ring_of_cliques, sbm
+from repro.graph.structure import Graph, graph_from_arrays
+
+
+# ------------------------------------------------------------ edge cases
+
+
+def test_coarsen_all_intra_edges_become_self_loops():
+    """Aggregating by a partition with NO cut edges: every coarse edge is a
+    self-loop and the vol/deg/modularity invariants survive exactly."""
+    k = 5
+    u, v, w, gt = ring_of_cliques(6, k)
+    # drop the ring edges so ground-truth communities are fully intra
+    keep = (u // k) == (v // k)
+    g = from_numpy_edges(u[keep], v[keep], w[keep], n=len(gt))
+    com = jnp.asarray(np.concatenate(
+        [gt, np.arange(len(gt), g.n_max)]), jnp.int32)
+
+    new_com, n_comm = aggregation.remap_communities(com, g.vertex_mask())
+    cg = aggregation.coarsen_graph(g, new_com, n_comm)
+
+    assert int(n_comm) == 6
+    # every surviving coarse edge is a self-loop
+    em = np.asarray(cg.edge_mask)
+    assert em.sum() == 6
+    np.testing.assert_array_equal(
+        np.asarray(cg.src)[em], np.asarray(cg.dst)[em])
+    # volume invariant: total directed weight (2W) is preserved
+    assert float(cg.total_volume()) == pytest.approx(
+        float(g.total_volume()), rel=1e-6)
+    # degree invariant: coarse deg(c) == sum of member degrees (community vol)
+    deg = np.asarray(g.weighted_degrees())
+    vol_c = np.zeros(g.n_max, np.float64)
+    np.add.at(vol_c, np.asarray(new_com)[: len(gt)], deg[: len(gt)])
+    np.testing.assert_allclose(
+        np.asarray(cg.weighted_degrees())[: int(n_comm)],
+        vol_c[: int(n_comm)], rtol=1e-6)
+    # modularity invariant: Q(fine, partition) == Q(coarse, identity)
+    ident = jnp.arange(cg.n_max, dtype=jnp.int32)
+    q_fine = float(modularity(g, new_com))
+    q_coarse = float(modularity(cg, ident))
+    assert q_fine == pytest.approx(q_coarse, abs=1e-6)
+    # all-intra partition of a disconnected union of cliques: Q = 1 - sum s_c^2
+    assert q_fine == pytest.approx(1.0 - 6 * (1.0 / 6) ** 2, abs=1e-5)
+
+
+def test_coarsen_preserves_modularity_with_cut_edges():
+    u, v, w, gt = sbm(120, 4, p_in=0.4, p_out=0.05, seed=13)
+    g = from_numpy_edges(u, v, w)
+    com = jnp.asarray(np.concatenate(
+        [gt, np.arange(len(gt), g.n_max)]), jnp.int32)
+    new_com, n_comm = aggregation.remap_communities(com, g.vertex_mask())
+    cg = aggregation.coarsen_graph(g, new_com, n_comm)
+    ident = jnp.arange(cg.n_max, dtype=jnp.int32)
+    assert float(modularity(cg, ident)) == pytest.approx(
+        float(modularity(g, new_com)), abs=1e-6)
+    assert float(cg.total_volume()) == pytest.approx(
+        float(g.total_volume()), rel=1e-6)
+
+
+def _empty_graph(n_max=16, m_max=32) -> Graph:
+    """A fully masked-out level: zero valid vertices, zero valid edges."""
+    sentinel = jnp.int32(n_max)
+    return Graph(
+        src=jnp.full((m_max,), sentinel),
+        dst=jnp.full((m_max,), sentinel),
+        w=jnp.zeros((m_max,), jnp.float32),
+        edge_mask=jnp.zeros((m_max,), bool),
+        n_valid=jnp.int32(0),
+        m_valid=jnp.int32(0),
+        n_max=n_max,
+        m_max=m_max,
+        sorted_by=None,
+    )
+
+
+def test_remap_and_coarsen_all_invalid_level():
+    """An all-masked-invalid level must stay a well-formed empty graph:
+    no phantom communities, no phantom edges, zero volumes/degrees."""
+    g = _empty_graph()
+    com = jnp.arange(g.n_max, dtype=jnp.int32)
+    new_com, n_comm = aggregation.remap_communities(com, g.vertex_mask())
+    assert int(n_comm) == 0
+    # every vertex slot maps to the sentinel
+    np.testing.assert_array_equal(
+        np.asarray(new_com), np.full(g.n_max, g.n_max, np.int32))
+
+    cg = aggregation.coarsen_graph(g, new_com, n_comm)
+    assert int(cg.n_valid) == 0
+    assert int(cg.m_valid) == 0
+    assert not bool(np.asarray(cg.edge_mask).any())
+    assert float(cg.total_volume()) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(cg.weighted_degrees()), np.zeros(g.n_max, np.float32))
+    # invalid slots hold sentinels, preserving the Graph convention
+    np.testing.assert_array_equal(
+        np.asarray(cg.src), np.full(g.m_max, g.n_max, np.int32))
+
+
+def test_coarsen_partially_masked_vertices():
+    """Vertices beyond n_valid are excluded from the coarse graph even if
+    stray (masked) edges mention them."""
+    u = np.array([0, 1, 2, 3], dtype=np.int64)
+    v = np.array([1, 0, 3, 2], dtype=np.int64)
+    w = np.ones(4, dtype=np.float32)
+    g = graph_from_arrays(jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+                          jnp.asarray(w), n_max=8, m_max=8, n_valid=4)
+    com = jnp.asarray([0, 0, 1, 1, 7, 7, 7, 7], jnp.int32)
+    new_com, n_comm = aggregation.remap_communities(com, g.vertex_mask())
+    assert int(n_comm) == 2
+    cg = aggregation.coarsen_graph(g, new_com, n_comm)
+    assert int(cg.n_valid) == 2
+    em = np.asarray(cg.edge_mask)
+    assert set(map(tuple, np.stack(
+        [np.asarray(cg.src)[em], np.asarray(cg.dst)[em]], axis=1))) == {
+            (0, 0), (1, 1)}
+    assert float(cg.total_volume()) == pytest.approx(4.0)
+
+
+# ------------------------------------------------------------ groupby compaction
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_groupby_sum_scatter_matches_argsort(seed):
+    """The one-sort scatter compaction must agree with the legacy two-sort
+    argsort compaction on every valid slot (slots beyond n_groups are
+    unspecified by contract and masked by group_valid)."""
+    rng = np.random.default_rng(seed)
+    m = 257
+    k1 = jnp.asarray(rng.integers(0, 12, m), jnp.int32)
+    k2 = jnp.asarray(rng.integers(0, 7, m), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    valid = jnp.asarray(rng.random(m) < 0.8)
+
+    (ka, sa, va, na) = seg.groupby_sum((k1, k2), vals, valid=valid,
+                                       compact_via="argsort")
+    (kb, sb, vb, nb) = seg.groupby_sum((k1, k2), vals, valid=valid,
+                                       compact_via="scatter")
+    n = int(na)
+    assert n == int(nb)
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+    for a, b in zip(ka, kb):
+        np.testing.assert_array_equal(np.asarray(a)[:n], np.asarray(b)[:n])
+    # sums agree bitwise on the valid prefix (same sort, same segment_sum)
+    np.testing.assert_array_equal(np.asarray(sa)[:n], np.asarray(sb)[:n])
+
+
+def test_groupby_sum_matches_numpy_reference():
+    rng = np.random.default_rng(3)
+    m = 200
+    k = rng.integers(0, 15, m)
+    vals = rng.standard_normal(m).astype(np.float32)
+    valid = rng.random(m) < 0.7
+    (gk,), gs, gv, ng = seg.groupby_sum(
+        (jnp.asarray(k, jnp.int32),), jnp.asarray(vals),
+        valid=jnp.asarray(valid))
+    expect = {}
+    for ki, vi, ok in zip(k, vals, valid):
+        if ok:
+            expect[int(ki)] = expect.get(int(ki), 0.0) + float(vi)
+    n = int(ng)
+    assert n == len(expect)
+    got = {int(a): float(b) for a, b in
+           zip(np.asarray(gk)[:n], np.asarray(gs)[:n])}
+    assert set(got) == set(expect)
+    for key in expect:
+        assert got[key] == pytest.approx(expect[key], abs=1e-5)
+
+
+def test_groupby_sum_all_invalid():
+    m = 33
+    (gk,), gs, gv, ng = seg.groupby_sum(
+        (jnp.zeros((m,), jnp.int32),), jnp.ones((m,), jnp.float32),
+        valid=jnp.zeros((m,), bool))
+    assert int(ng) == 0
+    assert not bool(np.asarray(gv).any())

@@ -47,6 +47,36 @@ def test_distributed_louvain_quality_parity():
     assert nmi_v > 0.85
 
 
+def test_distributed_pipeline_level_loop_in_worker():
+    """pipeline_fused=True: the whole level loop runs inside the shard_map
+    worker (one dispatch, one readback).  Must agree with the per-level
+    distributed driver on quality, produce coherent per-level histories,
+    and be deterministic across calls."""
+    out = _run_py("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.graph.generators import sbm, nmi
+        from repro.graph.builders import from_numpy_edges
+        from repro.core.distributed import distributed_louvain
+        u,v,w,gt = sbm(400, 8, p_in=0.3, p_out=0.01, seed=2)
+        g = from_numpy_edges(u,v,w)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ('data',))
+        rp = distributed_louvain(g, mesh, pipeline_fused=True)
+        rl = distributed_louvain(g, mesh, pipeline_fused=False)
+        rp2 = distributed_louvain(g, mesh, pipeline_fused=True)
+        assert rp.levels == len(rp.sweeps_per_level) == len(rp.n_comm_per_level)
+        assert all(s >= 1 for s in rp.sweeps_per_level)
+        assert rp.n_comm_per_level[-1] == rp.n_communities
+        assert np.array_equal(rp.labels, rp2.labels)
+        print('PIPE', float(rp.modularity), 'STEP', float(rl.modularity),
+              'NMI', nmi(np.asarray(rp.labels)[:len(gt)], gt))
+    """)
+    toks = out.split()
+    q_pipe, q_step, nmi_v = float(toks[1]), float(toks[3]), float(toks[5])
+    assert q_pipe > q_step - 0.03
+    assert nmi_v > 0.85
+
+
 def test_distributed_plp_runs_and_converges():
     out = _run_py("""
         import numpy as np, jax
