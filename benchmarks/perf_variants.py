@@ -17,6 +17,14 @@ one-sort vs two-sort groupby compaction delta —
 
   PYTHONPATH=src python -m benchmarks.perf_variants level_fusion com-dblp \
       algo=both repeat=3
+
+Gather-fusion mode (DESIGN.md §Kernels): time the fused gather-in-kernel
+local_move kernel against the legacy two-step path (HBM-gathered tiles +
+label_argmax/delta_q kernel, with and without the old per-bucket lax.scan
+chunk chain), per bucket width, checking bit-identical outputs —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants gather_fusion com-dblp \
+      algo=both repeat=3
 """
 import json
 import os
@@ -248,15 +256,184 @@ def run_level_fusion(dataset: str = "com-dblp", algo: str = "both",
     return out
 
 
+def run_gather_fusion(dataset: str = "com-dblp", algo: str = "both",
+                      repeat: int = 3):
+    """Fused gather-in-kernel local_move vs the legacy two-step path
+    (DESIGN.md §Kernels), per bucket width.
+
+    Three variants per degree bucket, all through the Pallas kernels:
+
+      * ``fused``       — ONE local_move grid call: tables ride along whole,
+                          gathers happen in-kernel, grid spans all chunks.
+      * ``two_step``    — the gathered (rows, W) label/vol/size/deg tiles are
+                          materialized outside, then label_argmax / delta_q
+                          scores them (no scan — isolates the gather traffic).
+      * ``legacy_scan`` — two_step driven through the pre-refactor per-bucket
+                          lax.scan chunk chain (the exact old engine path).
+
+    Outputs are checked bit-identical between fused and both baselines.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import moves
+    from repro.graph import datasets
+    from repro.graph.ell import build_device_ell, grid_view
+    from repro.kernels.delta_q import ops as dq_ops
+    from repro.kernels.label_argmax import ops as la_ops
+    from repro.kernels.local_move import ops as lm_ops
+
+    lg = datasets.load(dataset)
+    g = lg.graph
+    n = g.n_max
+    ell = build_device_ell(g)
+    out = {"mode": "gather_fusion", "dataset": dataset, "V": lg.n,
+           "E": lg.m_undirected}
+
+    # per-sweep state at singleton init — the tables every variant consumes
+    labels = jnp.arange(n, dtype=jnp.int32)
+    labels_ext = jnp.concatenate([labels, jnp.int32([n])])
+    vmask = g.vertex_mask()
+    deg = g.weighted_degrees()
+    vol_v = g.total_volume()
+    vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+    com_ext = labels_ext
+    vol_ext = jnp.concatenate([vol_com, jnp.zeros((1,), vol_com.dtype)])
+    size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
+    deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
+    seed = jnp.uint32(0)
+
+    def best_of(fn):
+        res = jax.block_until_ready(fn())  # warm/compile
+        t_best = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            dt = time.perf_counter() - t0
+            t_best = dt if t_best is None else min(t_best, dt)
+        return t_best, res
+
+    def plp_two_step(r_, nb, w_):
+        nbr_lab = jnp.where(nb < n, labels_ext[jnp.clip(nb, 0, n)], n)
+        cur_lab = labels_ext[jnp.clip(r_, 0, n)]
+        best, bs, cs = la_ops.label_argmax(
+            nbr_lab, w_, cur_lab, jnp.where(r_ < n, r_, n), seed,
+            tie_eps=0.25, sentinel=n, use_pallas=True)
+        return best, (best >= 0) & (bs > cs)
+
+    def louvain_two_step(r_, nb, w_):
+        rows_c = jnp.clip(r_, 0, n)
+        cand = jnp.where(nb < n, com_ext[jnp.clip(nb, 0, n)], n)
+        best, gain = dq_ops.delta_q_argmax(
+            cand_com=cand, nbr_w=w_, cur_com=com_ext[rows_c],
+            deg_v=deg_ext[rows_c],
+            vol_cand=vol_ext[jnp.clip(cand, 0, n)],
+            vol_cur=vol_ext[jnp.clip(com_ext[rows_c], 0, n)],
+            size_cand=size_ext[jnp.clip(cand, 0, n)],
+            size_cur=size_ext[jnp.clip(com_ext[rows_c], 0, n)],
+            vol_total=vol_v, sentinel=n, singleton_rule=True,
+            use_pallas=True)
+        return best, (best >= 0) & (gain > 0.0)
+
+    algos = ("plp", "louvain") if algo == "both" else (algo,)
+    for name in algos:
+        two = plp_two_step if name == "plp" else louvain_two_step
+        if name == "plp":
+            def fused(r_, nb, w_):
+                return lm_ops.local_move_plp(
+                    r_, nb, w_, labels_ext, seed, tie_eps=0.25, sentinel=n,
+                    use_pallas=True)
+        else:
+            def fused(r_, nb, w_):
+                return lm_ops.local_move_louvain(
+                    r_, nb, w_, com_ext, vol_ext, size_ext, deg_ext, vol_v,
+                    sentinel=n, singleton_rule=True, use_pallas=True)
+
+        def legacy_scan(rows_s, nbr_s, w_s):
+            def chunk(carry, c):
+                best, good = two(*c)
+                return carry, (best, good)
+            _, o = jax.lax.scan(chunk, 0, (rows_s, nbr_s, w_s))
+            return o[0].reshape(-1), o[1].reshape(-1)
+
+        fused_j = jax.jit(fused)
+        two_j = jax.jit(two)
+        legacy_j = jax.jit(legacy_scan)
+
+        widths = []
+        tot = {"fused_s": 0.0, "two_step_s": 0.0, "legacy_scan_s": 0.0}
+        identical = True
+        for b in ell.buckets:
+            rows, nbr, w = grid_view(b)
+            # the old engine evaluated every bucket; the fused engine skips
+            # statically-empty ones at trace time (graph/ell.DeviceBucket)
+            t_t, r_t = best_of(lambda: two_j(rows, nbr, w))
+            t_l, r_l = best_of(lambda: legacy_j(b.rows, b.nbr, b.w))
+            if b.n_rows_valid == 0:
+                rec = {"width": b.width, "rows": int(rows.shape[0]),
+                       "rows_real": 0, "chunks": int(b.rows.shape[0]),
+                       "fused_s": 0.0, "two_step_s": t_t,
+                       "legacy_scan_s": t_l, "statically_skipped": True,
+                       "bit_identical": True}
+            else:
+                t_f, r_f = best_of(lambda: fused_j(rows, nbr, w))
+                same = all(
+                    bool(jnp.array_equal(a, c)) and bool(jnp.array_equal(a, d))
+                    for a, c, d in zip(r_f, r_t, r_l))
+                identical &= same
+                rec = {"width": b.width,
+                       "rows": int(rows.shape[0]),
+                       "rows_real": b.n_rows_valid,
+                       "chunks": int(b.rows.shape[0]),
+                       "fused_s": t_f, "two_step_s": t_t,
+                       "legacy_scan_s": t_l,
+                       "statically_skipped": False,
+                       "fused_speedup_vs_two_step": t_t / t_f,
+                       "fused_speedup_vs_legacy_scan": t_l / t_f,
+                       "bit_identical": same}
+            widths.append(rec)
+            for k in tot:
+                tot[k] += rec[k]
+        out[f"{name}_per_width"] = widths
+        # headline KERNEL speedup: non-skipped buckets only, so the number
+        # measures the gather fusion itself, not the static empty-bucket skip
+        real = [r for r in widths if not r["statically_skipped"]]
+        for k in ("fused_s", "two_step_s", "legacy_scan_s"):
+            out[f"{name}_kernel_{k}"] = sum(r[k] for r in real)
+        kf = out[f"{name}_kernel_fused_s"]
+        out[f"{name}_kernel_speedup_vs_two_step"] = (
+            out[f"{name}_kernel_two_step_s"] / kf if kf else None)
+        out[f"{name}_kernel_speedup_vs_legacy_scan"] = (
+            out[f"{name}_kernel_legacy_scan_s"] / kf if kf else None)
+        # ENGINE totals: the old paths evaluated every bucket, the fused
+        # engine also skips the all-padding ones — skip benefit included,
+        # labeled as such
+        out[f"{name}_engine_fused_s"] = tot["fused_s"]
+        out[f"{name}_engine_two_step_s"] = tot["two_step_s"]
+        out[f"{name}_engine_legacy_scan_s"] = tot["legacy_scan_s"]
+        out[f"{name}_engine_speedup_vs_two_step"] = (
+            tot["two_step_s"] / tot["fused_s"] if tot["fused_s"] else None)
+        out[f"{name}_engine_speedup_vs_legacy_scan"] = (
+            tot["legacy_scan_s"] / tot["fused_s"] if tot["fused_s"] else None)
+        out[f"{name}_bit_identical"] = identical
+    print(json.dumps(out, indent=1))
+    return out
+
+
+_MODES = {"community": run_community, "level_fusion": run_level_fusion,
+          "gather_fusion": run_gather_fusion}
+
+
 def main():
-    if sys.argv[1] in ("community", "level_fusion"):
+    if sys.argv[1] in _MODES:
         dataset = sys.argv[2] if len(sys.argv) > 2 else "com-dblp"
         kw = {}
         for tok in sys.argv[3:]:
             k, v = tok.split("=", 1)
             kw[k] = int(v) if k == "repeat" else v
-        runner = run_community if sys.argv[1] == "community" else run_level_fusion
-        runner(dataset, **kw)
+        _MODES[sys.argv[1]](dataset, **kw)
         return
     arch, shape = sys.argv[1], sys.argv[2]
     overrides = {}

@@ -10,6 +10,9 @@
   level_fusion — whole-run pipeline (one dispatch per louvain()) vs the
             per-level driver, with the fig4 per-level local-moving /
             aggregation split and the groupby-compaction delta
+  gather_fusion — fused gather-in-kernel local_move vs the legacy two-step
+            (HBM-gathered tiles + scoring kernel, ± the old lax.scan chunk
+            chain), per bucket width (artifact: BENCH_gather_fusion.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -251,6 +254,33 @@ def bench_level_fusion(datasets=("com-amazon", "com-dblp")):
     return rows
 
 
+# ------------------------------------------------------------------ gather fusion
+
+
+def bench_gather_fusion(datasets=("com-dblp",)):
+    """Fused gather-in-kernel local_move vs the legacy two-step path
+    (DESIGN.md §Kernels) — the measurement behind the local_move kernel."""
+    from benchmarks.perf_variants import run_gather_fusion
+    rows = []
+    for name in datasets:
+        rec = run_gather_fusion(name, algo="both", repeat=3)
+        rows.append(rec)
+        for alg in ("plp", "louvain"):
+            ks = rec[f"{alg}_kernel_speedup_vs_two_step"]
+            es = rec[f"{alg}_engine_speedup_vs_two_step"]
+            print(f"[gather_fusion] {name:18s} {alg:8s} kernel "
+                  f"two-step {rec[f'{alg}_kernel_two_step_s']*1e3:.2f}ms -> "
+                  f"fused {rec[f'{alg}_kernel_fused_s']*1e3:.2f}ms "
+                  f"({ks and f'{ks:.2f}x' or 'n/a'})  "
+                  f"engine+skip {es and f'{es:.2f}x' or 'n/a'}  "
+                  f"bit_identical={rec[f'{alg}_bit_identical']}")
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_gather_fusion{suffix}", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -269,6 +299,7 @@ ALL = {
     "fig4": bench_fig4_strong_scaling,
     "sweep_fusion": bench_sweep_fusion,
     "level_fusion": bench_level_fusion,
+    "gather_fusion": bench_gather_fusion,
     "roofline": bench_roofline,
 }
 

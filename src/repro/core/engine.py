@@ -118,32 +118,27 @@ def _evaluate_segment(spec: EngineSpec, g: Graph, labels, active, it, seed,
     return best_cand, propose
 
 
-def _scan_propose(ell, active, n: int, eval_chunk):
-    """Shared ELL chunk plumbing: lax.scan ``eval_chunk(rows, nbr, w) ->
-    (best[Rc], good[Rc])`` over every bucket chunk, scattering per-row
+def _grid_propose(ell, active, n: int, eval_bucket):
+    """Shared ELL bucket plumbing: run ``eval_bucket(rows, nbr, w) ->
+    (best[R], propose[R])`` once per degree bucket over ALL of its chunks at
+    a time (one Pallas grid dispatch on the pallas backend, one vectorized
+    jnp call on the ell backend — no lax.scan chain), scattering per-row
     proposals into per-vertex arrays.  Slot n is the write sink for padding /
     non-proposing rows, so real rows (unique across buckets) never collide."""
+    from repro.graph.ell import grid_view
+
     proposal_ext = jnp.full((n + 1,), -1, jnp.int32)
     propose_ext = jnp.zeros((n + 1,), bool)
-
-    def chunk_body(carry, chunk):
-        proposal_ext, propose_ext = carry
-        rows, nbr, w = chunk
-        best, good = eval_chunk(rows, nbr, w)
+    for b in ell.buckets:
+        if b.n_rows_valid == 0:
+            continue  # statically empty bucket: pure-padding tiles, no work
+        rows, nbr, w = grid_view(b)
+        best, good = eval_bucket(rows, nbr, w)
         row_ok = (rows < n) & active[jnp.clip(rows, 0, n - 1)]
         row_prop = row_ok & good
         idx = jnp.where(row_prop, jnp.clip(rows, 0, n - 1), n)
         proposal_ext = proposal_ext.at[idx].set(jnp.where(row_prop, best, -1))
         propose_ext = propose_ext.at[idx].set(row_prop)
-        return proposal_ext, propose_ext
-
-    carry = (proposal_ext, propose_ext)
-    for b in ell.buckets:
-        carry, _ = jax.lax.scan(
-            lambda c, chunk: (chunk_body(c, chunk), None), carry,
-            (b.rows, b.nbr, b.w),
-        )
-    proposal_ext, propose_ext = carry
     return proposal_ext[:n], propose_ext[:n]
 
 
@@ -159,26 +154,28 @@ def _merge_tail(ell, active, n: int, proposal, propose, eval_tail):
 
 def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
                   use_pallas: bool):
-    """Degree-bucketed tile evaluator: lax.scan over stacked chunks, tail
-    vertices through the segment evaluator on pre-extracted tail edges."""
+    """Degree-bucketed fused-gather evaluator (DESIGN.md §Kernels).
+
+    The per-vertex tables (labels for PLP; community/volume/size/degree for
+    Louvain) are built ONCE per sweep and handed whole to the ``local_move``
+    kernel family, which performs the per-neighbor gathers in-kernel — no
+    gathered (rows, W) tiles are materialized here.  ``ell`` routes through
+    the pure-jnp oracle, ``pallas`` through the fused kernel; tail vertices
+    go through the segment evaluator on pre-extracted tail edges."""
+    from repro.kernels.local_move import ops as lm_ops
+
     n = g.n_max
 
     if spec.evaluator == "plp":
-        from repro.kernels.label_argmax import ops as la_ops
-
         labels_ext = jnp.concatenate([labels, jnp.int32([n])])
         noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
         noise_seed = seed.astype(jnp.uint32) + noise_it
 
-        def eval_chunk(rows, nbr, w):
-            nbr_lab = labels_ext[jnp.clip(nbr, 0, n)]
-            nbr_lab = jnp.where(nbr < n, nbr_lab, n)
-            cur_lab = labels_ext[jnp.clip(rows, 0, n)]
-            best_lab, best_score, cur_score = la_ops.label_argmax(
-                nbr_lab, w, cur_lab, jnp.where(rows < n, rows, n), noise_seed,
+        def eval_bucket(rows, nbr, w):
+            return lm_ops.local_move_plp(
+                rows, nbr, w, labels_ext, noise_seed,
                 tie_eps=spec.tie_eps, sentinel=n, use_pallas=use_pallas,
             )
-            return best_lab, (best_lab >= 0) & (best_score > cur_score)
 
         def eval_tail(valid_t):
             best_score, best_lab, cur_score = moves.plp_best_labels(
@@ -188,8 +185,6 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
             return best_lab, (best_lab >= 0) & (best_score > cur_score)
 
     else:  # louvain
-        from repro.kernels.delta_q import ops as dq_ops
-
         vmask = g.vertex_mask()
         deg = g.weighted_degrees()
         vol_v = g.total_volume()
@@ -199,24 +194,12 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
         size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
         deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
 
-        def eval_chunk(rows, nbr, w):
-            rows_c = jnp.clip(rows, 0, n)
-            cand = jnp.where(nbr < n, com_ext[jnp.clip(nbr, 0, n)], n)
-            best_cand, best_gain = dq_ops.delta_q_argmax(
-                cand_com=cand,
-                nbr_w=w,
-                cur_com=com_ext[rows_c],
-                deg_v=deg_ext[rows_c],
-                vol_cand=vol_ext[jnp.clip(cand, 0, n)],
-                vol_cur=vol_ext[jnp.clip(com_ext[rows_c], 0, n)],
-                size_cand=size_ext[jnp.clip(cand, 0, n)],
-                size_cur=size_ext[jnp.clip(com_ext[rows_c], 0, n)],
-                vol_total=vol_v,
-                sentinel=n,
-                singleton_rule=spec.singleton_rule,
+        def eval_bucket(rows, nbr, w):
+            return lm_ops.local_move_louvain(
+                rows, nbr, w, com_ext, vol_ext, size_ext, deg_ext, vol_v,
+                sentinel=n, singleton_rule=spec.singleton_rule,
                 use_pallas=use_pallas,
             )
-            return best_cand, (best_cand >= 0) & (best_gain > 0.0)
 
         def eval_tail(valid_t):
             best_gain, best_cand = moves.louvain_best_moves(
@@ -226,7 +209,7 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
             )
             return best_cand, vmask & (best_cand >= 0) & (best_gain > 0.0)
 
-    proposal, propose = _scan_propose(ell, active, n, eval_chunk)
+    proposal, propose = _grid_propose(ell, active, n, eval_bucket)
     if ell.has_tail:
         proposal, propose = _merge_tail(
             ell, active, n, proposal, propose, eval_tail)

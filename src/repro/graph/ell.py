@@ -28,7 +28,7 @@ from repro.graph.structure import Graph
 
 BUCKET_WIDTHS = (16, 64, 256, 1024)
 ROW_PAD = 8  # sublane alignment for (rows, W) tiles
-CHUNK_ELEMS = 1 << 15  # target neighbor slots per scan chunk (DESIGN.md §Engine)
+CHUNK_ELEMS = 1 << 15  # target neighbor slots per stacked chunk (DESIGN.md §Kernels)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,9 +129,12 @@ def build_ell(
 #
 # The sweep engine (core/engine.py) runs the whole local-moving phase inside
 # one jitted lax.while_loop, so bucket tiles must be device-resident pytree
-# leaves (host numpy would force a transfer per sweep) and scan-friendly:
-# each bucket is stacked into (n_chunks, rows_per_chunk, W) so the evaluator
-# is a lax.scan over chunks instead of one giant unrolled tile.
+# leaves (host numpy would force a transfer per sweep).  Each bucket is
+# stacked into one (n_chunks, rows_per_chunk, W) array; the fused local_move
+# kernel (DESIGN.md §Kernels) consumes it through ``grid_view`` as a single
+# (n_chunks·rows_per_chunk, W) tile, so chunks become independent grid steps
+# of one dispatch — the chunk dim is kept for layout/debug tooling, not for
+# a scan chain.
 
 
 def _rows_per_chunk(width: int, target_elems: int = CHUNK_ELEMS) -> int:
@@ -141,21 +144,38 @@ def _rows_per_chunk(width: int, target_elems: int = CHUNK_ELEMS) -> int:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["rows", "nbr", "w"],
-    meta_fields=["width"],
+    meta_fields=["width", "n_rows_valid"],
 )
 @dataclasses.dataclass(frozen=True)
 class DeviceBucket:
-    """One degree bucket, chunk-stacked for lax.scan.
+    """One degree bucket, chunk-stacked for the local_move Pallas grid.
 
     rows: int32[C, Rc]      vertex id per row (sentinel n_max for padding)
     nbr:  int32[C, Rc, W]   neighbor ids (sentinel n_max padding)
     w:    float32[C, Rc, W] edge weights (0 padding)
+
+    ``n_rows_valid`` is STATIC (a pytree meta field): the host-side bucketing
+    knows how many rows are real, so the sweep engine can skip all-padding
+    buckets at trace time instead of evaluating pure-sentinel tiles.
     """
 
     rows: jax.Array
     nbr: jax.Array
     w: jax.Array
     width: int
+    n_rows_valid: int = -1  # -1 = unknown (treated as non-empty)
+
+
+def grid_view(b: DeviceBucket) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Collapse the chunk dim: ``(rows[C·Rc], nbr[C·Rc, W], w[C·Rc, W])``.
+
+    This is the layout the fused local_move kernel grids over — one 1-D grid
+    of row-blocks spanning ALL chunks of the bucket (grid length =
+    n_chunks × row_blocks_per_chunk), replacing the old per-bucket lax.scan
+    chain.  The stack is chunk-major contiguous, so the reshape is free.
+    """
+    W = b.width
+    return b.rows.reshape(-1), b.nbr.reshape(-1, W), b.w.reshape(-1, W)
 
 
 @partial(
@@ -200,6 +220,7 @@ def to_device(g: Graph, e: EllGraph, rows_per_chunk: Optional[int] = None) -> De
                 nbr=jnp.asarray(nbr.reshape(c, rc, W)),
                 w=jnp.asarray(ww.reshape(c, rc, W)),
                 width=W,
+                n_rows_valid=b.n_rows_valid,
             )
         )
 

@@ -1,19 +1,27 @@
-"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §2).
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §2, §Kernels).
 
-Three kernels, each the TPU-native re-derivation of a phase the paper
+Four kernels, each the TPU-native re-derivation of a phase the paper
 parallelizes on CPU threads:
 
-* ``label_argmax`` — PLP move (Alg. 1 l.18): per-vertex weighted label mode
-  over degree-bucketed ELL tiles, via a W×W pairwise-equality reduction in
+* ``local_move`` — the fused local-moving hot path (Alg. 1 l.18 / Alg. 2
+  l.13-16): per-neighbor table gathers + PLP label mode / Louvain Eq. 1
+  argmax in ONE kernel, tables resident in the ANY memory space, one grid
+  over all chunks of a degree bucket.  This is what the sweep engine runs.
+* ``label_argmax`` — PLP move scoring only: per-vertex weighted label mode
+  over pre-gathered ELL tiles, via a W×W pairwise-equality reduction in
   VMEM (replaces the per-thread hash map).
-* ``delta_q`` — Louvain local-moving (Alg. 2 l.13-16): fused Eq. 1 gain +
-  argmax over neighboring communities on the same tiles.
+* ``delta_q`` — Louvain Δ𝑄 scoring only: fused Eq. 1 gain + argmax over
+  pre-gathered candidate tiles.
 * ``segment_sum`` — aggregation GroupBy reduce (Alg. 3): block-segmented sums
   over sorted keys with an O(num_blocks) spine fix-up (replaces scatter-add).
 
-Layout: <name>/kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
-pallas/oracle dispatch), ref.py (pure-jnp oracle).
-"""
-from repro.kernels import label_argmax, delta_q, segment_sum
+``label_argmax``/``delta_q`` are kept as the scored-tile building blocks for
+the gather_fusion benchmark baseline and standalone use; the engine routes
+through ``local_move``.
 
-__all__ = ["label_argmax", "delta_q", "segment_sum"]
+Layout: <name>/kernel.py (pl.pallas_call + BlockSpec), ops.py (dispatch
+wrapper, pallas/oracle), ref.py (pure-jnp oracle).
+"""
+from repro.kernels import label_argmax, delta_q, local_move, segment_sum
+
+__all__ = ["label_argmax", "delta_q", "local_move", "segment_sum"]

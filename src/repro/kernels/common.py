@@ -14,14 +14,27 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def pick_row_block(width: int, budget_elems: int = 1 << 21) -> int:
+def pick_row_block(width: int, budget_elems: int = 1 << 21,
+                   max_rows: int = 512) -> int:
     """Rows per block so the (R_blk, W, W) pairwise tensor stays within a
     ~8 MB f32 VMEM budget; sublane-aligned."""
     r = max(1, budget_elems // max(1, width * width))
-    r = min(r, 512)
+    r = min(r, max_rows)
     if r >= 8:
         r = (r // 8) * 8
     return r
+
+
+def pick_row_block_fused(width: int, budget_elems: int = 1 << 21) -> int:
+    """Row block for the gather-in-kernel local_move grid.
+
+    Unlike the scored-tile kernels, the fused kernel receives no gathered
+    (R_blk, W) input tiles — its per-step VMEM footprint is the neighbor tile
+    plus the shared table scratch — so narrow buckets can afford much taller
+    blocks under the same (R_blk, W, W) pairwise budget.  Fewer grid steps
+    amortize the table residency (and, in interpret mode, the per-step
+    dispatch) across the whole bucket."""
+    return pick_row_block(width, budget_elems, max_rows=2048)
 
 
 def hash_u32_jnp(x: jax.Array) -> jax.Array:

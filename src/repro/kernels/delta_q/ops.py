@@ -1,7 +1,13 @@
-"""Jit'd public wrapper for the delta_q kernel (pallas/oracle dispatch)."""
+"""Public wrapper for the delta_q kernel (pallas/oracle dispatch).
+
+A plain jit-safe function, deliberately NOT wrapped in ``jax.jit``: it is
+called inside the already-jitted sweep loop, where a nested jit adds
+trace/dispatch overhead and blocks fusion with the surrounding gather and
+scatter code.  Eager callers (tests, notebooks) pay one trace per call —
+wrap in ``jax.jit`` at the call site if that matters.
+"""
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
@@ -12,10 +18,6 @@ from repro.kernels.delta_q.kernel import delta_q_pallas
 from repro.kernels.delta_q.ref import delta_q_ref
 
 
-@partial(
-    jax.jit,
-    static_argnames=("sentinel", "singleton_rule", "use_pallas", "interpret"),
-)
 def delta_q_argmax(
     cand_com: jax.Array,
     nbr_w: jax.Array,

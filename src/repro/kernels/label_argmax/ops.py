@@ -1,7 +1,13 @@
-"""Jit'd public wrapper for the label_argmax kernel (pallas/oracle dispatch)."""
+"""Public wrapper for the label_argmax kernel (pallas/oracle dispatch).
+
+A plain jit-safe function, deliberately NOT wrapped in ``jax.jit``: it is
+called inside the already-jitted sweep loop, where a nested jit adds
+trace/dispatch overhead and blocks fusion with the surrounding gather and
+scatter code.  Eager callers (tests, notebooks) pay one trace per call —
+wrap in ``jax.jit`` at the call site if that matters.
+"""
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
@@ -12,7 +18,6 @@ from repro.kernels.label_argmax.kernel import label_argmax_pallas
 from repro.kernels.label_argmax.ref import label_argmax_ref
 
 
-@partial(jax.jit, static_argnames=("tie_eps", "sentinel", "use_pallas", "interpret"))
 def label_argmax(
     nbr_lab: jax.Array,
     nbr_w: jax.Array,

@@ -1,0 +1,16 @@
+"""Fused gather-in-kernel local-move kernels (DESIGN.md §Kernels).
+
+One kernel family replaces the gather→``label_argmax``/``delta_q_argmax``
+two-step of the ELL evaluator: the kernel receives the ELL neighbor tiles
+blocked into VMEM plus the WHOLE per-vertex tables (labels / community /
+volume / size / degree) resident in the ANY memory space, performs the
+per-neighbor gathers inside the kernel, and emits ``(proposal, propose)``
+directly — no gathered (rows, W) intermediates ever hit HBM.
+
+Layout mirrors the sibling kernels: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (plain jit-safe dispatch wrapper), ref.py (pure-jnp oracle reusing the
+label_argmax / delta_q oracles for bit-compatibility).
+"""
+from repro.kernels.local_move import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,264 @@
+"""Pallas TPU kernel: fused gather + local-move scoring (DESIGN.md §Kernels).
+
+The legacy ELL path materialized four gathered (rows, W) tiles in HBM before
+every ``label_argmax`` / ``delta_q_argmax`` launch and serialized chunks
+through a per-bucket ``lax.scan``.  Here the whole per-vertex tables ride
+along in the ANY memory space, are DMA'd once into VMEM scratch on the first
+grid step, and every gather happens inside the kernel — the only HBM traffic
+per row-block is the neighbor tile itself plus two (R_blk, 1) outputs.
+
+Grid scheme: one pallas_call per degree bucket with a 1-D grid over
+row-blocks spanning ALL chunks of the bucket (the (n_chunks, rows, W) stack
+of ``graph/ell.to_device`` collapses to (n_chunks·rows, W) for free), so
+chunks become independent grid steps of one dispatch instead of a
+lax.scan-carried chain.  INVARIANT: the grid must keep the default
+sequential ("arbitrary") dimension semantics — the table scratch is
+populated only on the first grid step, so declaring the dimension parallel
+(megacore) would hand later steps never-DMA'd scratch.
+``pick_row_block_fused`` sizes R_blk so the (R_blk, W, W) pairwise tensor
+stays within the VMEM budget; the table scratch adds ~(n+1) entries per
+table (4 B each), which bounds this layout to graphs whose tables fit VMEM
+— beyond that the tables would be streamed per block (future work).
+
+The scoring math lives in ref.py (which itself delegates to the
+label_argmax / delta_q oracles): each kernel body is just table-DMA +
+in-kernel gather+score via the SAME traced code as the oracle path, so
+kernel ≡ ref bit-compatibility holds by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import pick_row_block_fused
+from repro.kernels.local_move.ref import (
+    local_move_louvain_ref,
+    local_move_plp_ref,
+)
+
+TABLE_LANE = 128  # table padding unit (lane width) for the VMEM scratch
+
+
+def _pad_table(tab: jax.Array, fill) -> jax.Array:
+    """Pad a (n+1,) table to a lane multiple for the ANY→VMEM copy."""
+    m = tab.shape[0]
+    pad = (-m) % TABLE_LANE
+    return jnp.pad(tab, (0, pad), constant_values=fill) if pad else tab
+
+
+def _copy_tables_once(table_refs, scratch_refs, sem):
+    """DMA every table into VMEM scratch on the first grid step only;
+    scratch persists across grid steps, so later blocks reuse the copies.
+    Relies on the sequential ("arbitrary") grid execution order — see the
+    module-docstring INVARIANT."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        for src, dst in zip(table_refs, scratch_refs):
+            cp = pltpu.make_async_copy(src, dst, sem)
+            cp.start()
+            cp.wait()
+
+
+def _local_move_plp_kernel(
+    lab_tab_ref,   # (n_pad,) int32 in ANY — whole labels_ext table
+    rows_ref,      # (R_blk, 1) int32
+    nbr_ref,       # (R_blk, W) int32
+    w_ref,         # (R_blk, W) float32
+    seed_ref,      # (1, 1) int32
+    out_lab_ref,   # (R_blk, 1) int32
+    out_prop_ref,  # (R_blk, 1) int32 (0/1)
+    lab_vmem,      # (n_pad,) int32 VMEM scratch
+    sem,
+    *,
+    sentinel: int,
+    tie_eps: float,
+):
+    _copy_tables_once((lab_tab_ref,), (lab_vmem,), sem)
+    # gathers + scoring run in-kernel on the VMEM-resident table, through the
+    # SAME code as the oracle path (ref.py); indices are clipped to [0, n],
+    # so the lane padding of the (n_pad,) scratch is never read
+    best_lab, prop = local_move_plp_ref(
+        rows_ref[...][:, 0],
+        nbr_ref[...],
+        w_ref[...],
+        lab_vmem[...],
+        seed_ref[0, 0].astype(jnp.uint32),
+        tie_eps=tie_eps,
+        sentinel=sentinel,
+    )
+    out_lab_ref[...] = best_lab[:, None]
+    out_prop_ref[...] = prop.astype(jnp.int32)[:, None]
+
+
+def _local_move_louvain_kernel(
+    com_tab_ref,   # (n_pad,) int32 in ANY
+    vol_tab_ref,   # (n_pad,) float32 in ANY
+    size_tab_ref,  # (n_pad,) int32 in ANY
+    deg_tab_ref,   # (n_pad,) float32 in ANY
+    rows_ref,      # (R_blk, 1) int32
+    nbr_ref,       # (R_blk, W) int32
+    w_ref,         # (R_blk, W) float32
+    invvol_ref,    # (1, 1) float32
+    out_cand_ref,  # (R_blk, 1) int32
+    out_prop_ref,  # (R_blk, 1) int32 (0/1)
+    com_vmem,
+    vol_vmem,
+    size_vmem,
+    deg_vmem,
+    sem,
+    *,
+    sentinel: int,
+    singleton_rule: bool,
+):
+    _copy_tables_once(
+        (com_tab_ref, vol_tab_ref, size_tab_ref, deg_tab_ref),
+        (com_vmem, vol_vmem, size_vmem, deg_vmem),
+        sem,
+    )
+    # gathers (candidate community, then the Eq. 1 volume/size/degree terms —
+    # five tiles that never touch HBM) + scoring run in-kernel on the
+    # VMEM-resident tables, through the SAME code as the oracle path (ref.py)
+    best_cand, prop = local_move_louvain_ref(
+        rows_ref[...][:, 0],
+        nbr_ref[...],
+        w_ref[...],
+        com_vmem[...],
+        vol_vmem[...],
+        size_vmem[...],
+        deg_vmem[...],
+        invvol_ref[0, 0],
+        sentinel=sentinel,
+        singleton_rule=singleton_rule,
+    )
+    out_cand_ref[...] = best_cand[:, None]
+    out_prop_ref[...] = prop.astype(jnp.int32)[:, None]
+
+
+def _pad_tiles(rows, nbr, w, r_blk: int, sentinel: int):
+    R = rows.shape[0]
+    pad = (-R) % r_blk
+    if pad:
+        rows = jnp.pad(rows, (0, pad), constant_values=sentinel)
+        nbr = jnp.pad(nbr, ((0, pad), (0, 0)), constant_values=sentinel)
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    return rows, nbr, w, R + pad
+
+
+def local_move_plp_pallas(
+    rows: jax.Array,        # (R,) int32
+    nbr: jax.Array,         # (R, W) int32
+    w: jax.Array,           # (R, W) float32
+    labels_ext: jax.Array,  # (n+1,) int32
+    seed: jax.Array,        # scalar int/uint32
+    *,
+    tie_eps: float,
+    sentinel: int,
+    interpret: bool,
+    row_block: int | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    R, W = nbr.shape
+    r_blk = row_block or min(pick_row_block_fused(W), R)
+    rows, nbr, w, Rp = _pad_tiles(rows, nbr, w, r_blk, sentinel)
+    tab = _pad_table(labels_ext, sentinel)
+    n_pad = tab.shape[0]
+
+    kern = functools.partial(
+        _local_move_plp_kernel, sentinel=sentinel, tie_eps=tie_eps
+    )
+    wide = lambda: pl.BlockSpec((r_blk, W), lambda i: (i, 0))
+    col = lambda: pl.BlockSpec((r_blk, 1), lambda i: (i, 0))
+    out_lab, out_prop = pl.pallas_call(
+        kern,
+        grid=(Rp // r_blk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            col(), wide(), wide(),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[col(), col()],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_pad,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(
+        tab,
+        rows[:, None],
+        nbr,
+        w,
+        jnp.asarray(seed, jnp.int32).reshape(1, 1),
+    )
+    return out_lab[:R, 0], out_prop[:R, 0]
+
+
+def local_move_louvain_pallas(
+    rows: jax.Array,      # (R,) int32
+    nbr: jax.Array,       # (R, W) int32
+    w: jax.Array,         # (R, W) float32
+    com_ext: jax.Array,   # (n+1,) int32
+    vol_ext: jax.Array,   # (n+1,) float32
+    size_ext: jax.Array,  # (n+1,) int32
+    deg_ext: jax.Array,   # (n+1,) float32
+    inv_vol: jax.Array,   # f32 scalar
+    *,
+    sentinel: int,
+    singleton_rule: bool,
+    interpret: bool,
+    row_block: int | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    R, W = nbr.shape
+    r_blk = row_block or min(pick_row_block_fused(W), R)
+    rows, nbr, w, Rp = _pad_tiles(rows, nbr, w, r_blk, sentinel)
+    com_t = _pad_table(com_ext, sentinel)
+    vol_t = _pad_table(vol_ext, 0)
+    size_t = _pad_table(size_ext, 0)
+    deg_t = _pad_table(deg_ext, 0)
+    n_pad = com_t.shape[0]
+
+    kern = functools.partial(
+        _local_move_louvain_kernel,
+        sentinel=sentinel,
+        singleton_rule=singleton_rule,
+    )
+    any_spec = lambda: pl.BlockSpec(memory_space=pltpu.ANY)
+    wide = lambda: pl.BlockSpec((r_blk, W), lambda i: (i, 0))
+    col = lambda: pl.BlockSpec((r_blk, 1), lambda i: (i, 0))
+    out_cand, out_prop = pl.pallas_call(
+        kern,
+        grid=(Rp // r_blk,),
+        in_specs=[
+            any_spec(), any_spec(), any_spec(), any_spec(),
+            col(), wide(), wide(),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[col(), col()],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_pad,), jnp.int32),
+            pltpu.VMEM((n_pad,), jnp.float32),
+            pltpu.VMEM((n_pad,), jnp.int32),
+            pltpu.VMEM((n_pad,), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(
+        com_t, vol_t, size_t, deg_t,
+        rows[:, None],
+        nbr,
+        w,
+        jnp.asarray(inv_vol, jnp.float32).reshape(1, 1),
+    )
+    return out_cand[:R, 0], out_prop[:R, 0]

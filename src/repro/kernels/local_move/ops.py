@@ -1,0 +1,106 @@
+"""Dispatch wrappers for the fused local_move kernels (pallas/oracle).
+
+Plain jit-safe functions, deliberately NOT wrapped in ``jax.jit``: they are
+only ever called inside the already-jitted sweep loop, where a nested jit
+would add trace/dispatch overhead and block fusion with the surrounding
+scatter (same rationale as the label_argmax / delta_q wrappers).
+
+Inputs accept any leading shape — ``rows`` may be the chunk-stacked
+(n_chunks, rows) layout of ``graph/ell.DeviceEll`` or already flat; the
+wrapper collapses leading dims so the Pallas grid spans all chunks of the
+bucket, and reshapes the outputs back.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.local_move.kernel import (
+    local_move_louvain_pallas,
+    local_move_plp_pallas,
+)
+from repro.kernels.local_move.ref import (
+    local_move_louvain_ref,
+    local_move_plp_ref,
+)
+
+
+def _flatten(rows, nbr, w):
+    W = nbr.shape[-1]
+    return (
+        rows.reshape(-1).astype(jnp.int32),
+        nbr.reshape(-1, W).astype(jnp.int32),
+        w.reshape(-1, W).astype(jnp.float32),
+    )
+
+
+def local_move_plp(
+    rows: jax.Array,        # (..., ) int32 vertex id per row
+    nbr: jax.Array,         # (..., W) int32 neighbor ids
+    w: jax.Array,           # (..., W) float32 edge weights
+    labels_ext: jax.Array,  # (n+1,) labels table, labels_ext[n] = n
+    seed: jax.Array,        # scalar tie-noise seed
+    *,
+    tie_eps: float,
+    sentinel: int,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best_label, propose) per row, gathers fused into the evaluator."""
+    lead = rows.shape
+    rows_f, nbr_f, w_f = _flatten(rows, nbr, w)
+    labels_ext = labels_ext.astype(jnp.int32)
+    if use_pallas:
+        interp = default_interpret() if interpret is None else interpret
+        best, prop = local_move_plp_pallas(
+            rows_f, nbr_f, w_f, labels_ext, seed,
+            tie_eps=tie_eps, sentinel=sentinel, interpret=interp,
+        )
+        prop = prop != 0
+    else:
+        best, prop = local_move_plp_ref(
+            rows_f, nbr_f, w_f, labels_ext, seed,
+            tie_eps=tie_eps, sentinel=sentinel,
+        )
+    return best.reshape(lead), prop.reshape(lead)
+
+
+def local_move_louvain(
+    rows: jax.Array,      # (..., ) int32 vertex id per row
+    nbr: jax.Array,       # (..., W) int32 neighbor ids
+    w: jax.Array,         # (..., W) float32 edge weights
+    com_ext: jax.Array,   # (n+1,) community table, com_ext[n] = n
+    vol_ext: jax.Array,   # (n+1,) community volumes, vol_ext[n] = 0
+    size_ext: jax.Array,  # (n+1,) community sizes, size_ext[n] = 0
+    deg_ext: jax.Array,   # (n+1,) weighted degrees, deg_ext[n] = 0
+    vol_total: jax.Array,  # scalar vol(V)
+    *,
+    sentinel: int,
+    singleton_rule: bool = True,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best_community, propose) per row; gain test is Eq. 1 > 0."""
+    lead = rows.shape
+    rows_f, nbr_f, w_f = _flatten(rows, nbr, w)
+    com_ext = com_ext.astype(jnp.int32)
+    vol_ext = vol_ext.astype(jnp.float32)
+    size_ext = size_ext.astype(jnp.int32)
+    deg_ext = deg_ext.astype(jnp.float32)
+    inv_vol = (1.0 / vol_total).astype(jnp.float32)
+    if use_pallas:
+        interp = default_interpret() if interpret is None else interpret
+        best, prop = local_move_louvain_pallas(
+            rows_f, nbr_f, w_f, com_ext, vol_ext, size_ext, deg_ext, inv_vol,
+            sentinel=sentinel, singleton_rule=singleton_rule, interpret=interp,
+        )
+        prop = prop != 0
+    else:
+        best, prop = local_move_louvain_ref(
+            rows_f, nbr_f, w_f, com_ext, vol_ext, size_ext, deg_ext, inv_vol,
+            sentinel=sentinel, singleton_rule=singleton_rule,
+        )
+    return best.reshape(lead), prop.reshape(lead)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the fused gather-in-kernel local-move kernels.
+
+The contract shared with kernel.py: per row r (one vertex, ELL tile of width
+W), gather the per-vertex tables at the neighbor ids, then score the move —
+the PLP weighted label mode or the Louvain Eq. 1 ΔQ argmax — and emit the
+per-row ``(proposal, propose)`` pair directly.
+
+Tables are the (n+1)-entry "extended" arrays the sweep engine builds once per
+sweep: slot ``sentinel`` (= n) is the padding sink, so ``labels_ext[n] = n``,
+``vol_ext[n] = size_ext[n] = deg_ext[n] = 0``.  Row/neighbor ids are in
+[0, n] with n marking padding.
+
+The scoring math is delegated to the label_argmax / delta_q oracles so this
+ref stays bit-compatible with the legacy gather-outside two-step by
+construction (same gather expressions, same reductions, same tie-breaks).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.delta_q.ref import delta_q_ref
+from repro.kernels.label_argmax.ref import label_argmax_ref
+
+
+def local_move_plp_ref(
+    rows: jax.Array,        # (R,) int32 vertex id per row (sentinel = pad)
+    nbr: jax.Array,         # (R, W) int32 neighbor ids (sentinel = pad)
+    w: jax.Array,           # (R, W) float32 edge weights (0 = pad)
+    labels_ext: jax.Array,  # (n+1,) int32, labels_ext[n] = n
+    seed: jax.Array,        # uint32 scalar tie-noise seed
+    *,
+    tie_eps: float,
+    sentinel: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best_label[R], propose[R]) for the PLP move, gathers included."""
+    n = sentinel
+    nbr_lab = jnp.where(nbr < n, labels_ext[jnp.clip(nbr, 0, n)], n)
+    cur_lab = labels_ext[jnp.clip(rows, 0, n)]
+    rows_n = jnp.where(rows < n, rows, n)
+    best_lab, best_score, cur_score = label_argmax_ref(
+        nbr_lab, w, cur_lab, rows_n, seed, tie_eps, sentinel
+    )
+    return best_lab, (best_lab >= 0) & (best_score > cur_score)
+
+
+def local_move_louvain_ref(
+    rows: jax.Array,      # (R,) int32 vertex id per row (sentinel = pad)
+    nbr: jax.Array,       # (R, W) int32 neighbor ids (sentinel = pad)
+    w: jax.Array,         # (R, W) float32 edge weights (0 = pad)
+    com_ext: jax.Array,   # (n+1,) int32 community per vertex, com_ext[n] = n
+    vol_ext: jax.Array,   # (n+1,) float32 community volume, vol_ext[n] = 0
+    size_ext: jax.Array,  # (n+1,) int32 community size, size_ext[n] = 0
+    deg_ext: jax.Array,   # (n+1,) float32 weighted degree, deg_ext[n] = 0
+    inv_vol: jax.Array,   # f32 scalar 1 / vol(V)
+    *,
+    sentinel: int,
+    singleton_rule: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best_community[R], propose[R]) for the Louvain move (Eq. 1)."""
+    n = sentinel
+    rows_c = jnp.clip(rows, 0, n)
+    cand = jnp.where(nbr < n, com_ext[jnp.clip(nbr, 0, n)], n)
+    cur = com_ext[rows_c]
+    best_cand, best_gain = delta_q_ref(
+        cand, w, cur,
+        deg_ext[rows_c],
+        vol_ext[jnp.clip(cand, 0, n)],
+        vol_ext[jnp.clip(cur, 0, n)],
+        size_ext[jnp.clip(cand, 0, n)],
+        size_ext[jnp.clip(cur, 0, n)],
+        inv_vol,
+        sentinel=sentinel,
+        singleton_rule=singleton_rule,
+    )
+    return best_cand, (best_cand >= 0) & (best_gain > 0.0)

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import default_interpret
+
 DEFAULT_BLOCK = 512
 
 
@@ -27,9 +29,14 @@ def _block_segsum_kernel(keys_ref, vals_ref, out_ref):
 
 
 def block_segment_sums_pallas(
-    keys: jax.Array, vals: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = True
+    keys: jax.Array,
+    vals: jax.Array,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Per-position within-block run totals; input length must divide ``block``."""
+    if interpret is None:
+        interpret = default_interpret()
     m = keys.shape[0]
     assert m % block == 0, "caller pads to a block multiple"
     nb = m // block
