@@ -25,6 +25,13 @@ chunk chain), per bucket width, checking bit-identical outputs —
 
   PYTHONPATH=src python -m benchmarks.perf_variants gather_fusion com-dblp \
       algo=both repeat=3
+
+Table-streaming mode (DESIGN.md §Kernels): time the windowed streamed table
+layout against the VMEM-resident fast path (and the legacy two-step), per
+bucket width, with per-bucket window stats and a bit-identical check —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants table_streaming com-dblp \
+      algo=both repeat=3 block_rows=512
 """
 import json
 import os
@@ -422,8 +429,154 @@ def run_gather_fusion(dataset: str = "com-dblp", algo: str = "both",
     return out
 
 
+def run_table_streaming(dataset: str = "com-dblp", algo: str = "both",
+                        repeat: int = 3, block_rows: str | int | None = None):
+    """Windowed table streaming vs the resident fast path (DESIGN.md
+    §Kernels), per bucket width.
+
+    Three variants per degree bucket, all through the Pallas kernels:
+
+      * ``resident``  — whole tables DMA'd into VMEM scratch on grid step 0
+                        (the fast path; sequential grid).
+      * ``streamed``  — per-row-block table windows via scalar-prefetch
+                        BlockSpecs, double-buffered by the Pallas pipeline,
+                        parallel (megacore-able) grid.
+      * ``two_step``  — the legacy HBM-gathered tiles + scoring kernel
+                        (baseline context shared with ``gather_fusion``).
+
+    Outputs are checked bit-identical across all three.  Per-bucket window
+    stats (slot stride, window fraction of the table) quantify how much of
+    each table a streamed step actually reads.  ``block_rows`` overrides
+    the row-block/window granularity (``graph/ell.to_device``).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import moves
+    from repro.graph import datasets
+    from repro.graph.ell import build_ell, grid_view, to_device
+    from repro.kernels.delta_q import ops as dq_ops
+    from repro.kernels.label_argmax import ops as la_ops
+    from repro.kernels.local_move import ops as lm_ops
+
+    lg = datasets.load(dataset)
+    g = lg.graph
+    n = g.n_max
+    br = int(block_rows) if block_rows else None
+    ell = to_device(g, build_ell(g), block_rows=br)
+    out = {"mode": "table_streaming", "dataset": dataset, "V": lg.n,
+           "E": lg.m_undirected, "block_rows_override": br}
+
+    labels = jnp.arange(n, dtype=jnp.int32)
+    labels_ext = jnp.concatenate([labels, jnp.int32([n])])
+    vmask = g.vertex_mask()
+    deg = g.weighted_degrees()
+    vol_v = g.total_volume()
+    vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+    com_ext = labels_ext
+    vol_ext = jnp.concatenate([vol_com, jnp.zeros((1,), vol_com.dtype)])
+    size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
+    deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
+    seed = jnp.uint32(0)
+
+    def best_of(fn):
+        res = jax.block_until_ready(fn())  # warm/compile
+        t_best = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            dt = time.perf_counter() - t0
+            t_best = dt if t_best is None else min(t_best, dt)
+        return t_best, res
+
+    def plp_two_step(r_, nb, w_):
+        nbr_lab = jnp.where(nb < n, labels_ext[jnp.clip(nb, 0, n)], n)
+        cur_lab = labels_ext[jnp.clip(r_, 0, n)]
+        best, bs, cs = la_ops.label_argmax(
+            nbr_lab, w_, cur_lab, jnp.where(r_ < n, r_, n), seed,
+            tie_eps=0.25, sentinel=n, use_pallas=True)
+        return best, (best >= 0) & (bs > cs)
+
+    def louvain_two_step(r_, nb, w_):
+        rows_c = jnp.clip(r_, 0, n)
+        cand = jnp.where(nb < n, com_ext[jnp.clip(nb, 0, n)], n)
+        best, gain = dq_ops.delta_q_argmax(
+            cand_com=cand, nbr_w=w_, cur_com=com_ext[rows_c],
+            deg_v=deg_ext[rows_c],
+            vol_cand=vol_ext[jnp.clip(cand, 0, n)],
+            vol_cur=vol_ext[jnp.clip(com_ext[rows_c], 0, n)],
+            size_cand=size_ext[jnp.clip(cand, 0, n)],
+            size_cur=size_ext[jnp.clip(com_ext[rows_c], 0, n)],
+            vol_total=vol_v, sentinel=n, singleton_rule=True,
+            use_pallas=True)
+        return best, (best >= 0) & (gain > 0.0)
+
+    def make_fused(name, table_mode, windows):
+        if name == "plp":
+            def f(r_, nb, w_):
+                return lm_ops.local_move_plp(
+                    r_, nb, w_, labels_ext, seed, tie_eps=0.25, sentinel=n,
+                    use_pallas=True, windows=windows, table_mode=table_mode)
+        else:
+            def f(r_, nb, w_):
+                return lm_ops.local_move_louvain(
+                    r_, nb, w_, com_ext, vol_ext, size_ext, deg_ext, vol_v,
+                    sentinel=n, singleton_rule=True,
+                    use_pallas=True, windows=windows, table_mode=table_mode)
+        return jax.jit(f)
+
+    algos = ("plp", "louvain") if algo == "both" else (algo,)
+    for name in algos:
+        two_j = jax.jit(plp_two_step if name == "plp" else louvain_two_step)
+        widths = []
+        identical = True
+        for b in ell.buckets:
+            if b.n_rows_valid == 0:
+                continue  # statically skipped by the engine either way
+            rows, nbr, w = grid_view(b)
+            res_j = make_fused(name, "resident", None)
+            str_j = make_fused(name, "streamed", b.windows)
+            t_r, r_r = best_of(lambda: res_j(rows, nbr, w))
+            t_s, r_s = best_of(lambda: str_j(rows, nbr, w))
+            t_t, r_t = best_of(lambda: two_j(rows, nbr, w))
+            same = all(
+                bool(jnp.array_equal(a, c)) and bool(jnp.array_equal(a, d))
+                for a, c, d in zip(r_r, r_s, r_t))
+            identical &= same
+            win = b.windows
+            widths.append({
+                "width": b.width,
+                "rows": int(rows.shape[0]),
+                "rows_real": b.n_rows_valid,
+                "n_blocks": int(win.win_blk.shape[0]),
+                "block_rows": win.block_rows,
+                "window_slot": win.slot,
+                "window_frac": min(1.0, 2 * win.slot / (n + 1)),
+                "resident_s": t_r,
+                "streamed_s": t_s,
+                "two_step_s": t_t,
+                "streamed_vs_resident": t_r / t_s,
+                "resident_speedup_vs_two_step": t_t / t_r,
+                "bit_identical": same,
+            })
+        out[f"{name}_per_width"] = widths
+        for k in ("resident_s", "streamed_s", "two_step_s"):
+            out[f"{name}_kernel_{k}"] = sum(r[k] for r in widths)
+        kr = out[f"{name}_kernel_resident_s"]
+        ks = out[f"{name}_kernel_streamed_s"]
+        out[f"{name}_streamed_vs_resident"] = kr / ks if ks else None
+        out[f"{name}_resident_speedup_vs_two_step"] = (
+            out[f"{name}_kernel_two_step_s"] / kr if kr else None)
+        out[f"{name}_bit_identical"] = identical
+    print(json.dumps(out, indent=1))
+    return out
+
+
 _MODES = {"community": run_community, "level_fusion": run_level_fusion,
-          "gather_fusion": run_gather_fusion}
+          "gather_fusion": run_gather_fusion,
+          "table_streaming": run_table_streaming}
 
 
 def main():
@@ -432,7 +585,7 @@ def main():
         kw = {}
         for tok in sys.argv[3:]:
             k, v = tok.split("=", 1)
-            kw[k] = int(v) if k == "repeat" else v
+            kw[k] = int(v) if k in ("repeat", "block_rows") else v
         _MODES[sys.argv[1]](dataset, **kw)
         return
     arch, shape = sys.argv[1], sys.argv[2]

@@ -13,6 +13,9 @@
   gather_fusion — fused gather-in-kernel local_move vs the legacy two-step
             (HBM-gathered tiles + scoring kernel, ± the old lax.scan chunk
             chain), per bucket width (artifact: BENCH_gather_fusion.json)
+  table_streaming — windowed streamed table layout vs the VMEM-resident
+            fast path vs two-step, per bucket width, with window stats
+            (artifact: BENCH_table_streaming.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -281,6 +284,39 @@ def bench_gather_fusion(datasets=("com-dblp",)):
     return rows
 
 
+# ------------------------------------------------------------------ table streaming
+
+
+def bench_table_streaming(datasets=("com-dblp",)):
+    """Windowed table streaming vs resident fast path (DESIGN.md §Kernels) —
+    the measurement behind the beyond-VMEM local_move layout."""
+    from benchmarks.perf_variants import run_table_streaming
+    rows = []
+    for name in datasets:
+        rec = run_table_streaming(name, algo="both", repeat=3)
+        rows.append(rec)
+        for alg in ("plp", "louvain"):
+            sr = rec[f"{alg}_streamed_vs_resident"]
+            rt = rec[f"{alg}_resident_speedup_vs_two_step"]
+            print(f"[table_streaming] {name:18s} {alg:8s} "
+                  f"resident {rec[f'{alg}_kernel_resident_s']*1e3:.2f}ms  "
+                  f"streamed {rec[f'{alg}_kernel_streamed_s']*1e3:.2f}ms "
+                  f"(streamed/resident {sr and f'{1/sr:.2f}x' or 'n/a'})  "
+                  f"resident-vs-two-step {rt and f'{rt:.2f}x' or 'n/a'}  "
+                  f"bit_identical={rec[f'{alg}_bit_identical']}")
+            for r in rec[f"{alg}_per_width"]:
+                print(f"    W={r['width']:<5d} rows={r['rows_real']:<8d} "
+                      f"blocks={r['n_blocks']:<5d} "
+                      f"window={r['window_frac']:.1%} of table  "
+                      f"resident={r['resident_s']*1e3:.2f}ms "
+                      f"streamed={r['streamed_s']*1e3:.2f}ms")
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_table_streaming{suffix}", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -300,6 +336,7 @@ ALL = {
     "sweep_fusion": bench_sweep_fusion,
     "level_fusion": bench_level_fusion,
     "gather_fusion": bench_gather_fusion,
+    "table_streaming": bench_table_streaming,
     "roofline": bench_roofline,
 }
 

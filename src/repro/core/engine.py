@@ -66,12 +66,20 @@ class EngineSpec(ConfigBase):
     use_frontier: bool = True    # paper's active-vertex optimization
     reshuffle_ties: bool = False # PLP: re-draw tie noise each sweep
     singleton_rule: bool = True  # Louvain: Lu et al. swap suppression
+    # ell/pallas table layout (DESIGN.md §Kernels): VMEM-resident tables vs
+    # per-row-block windowed streaming; "auto" resolves from the VMEM byte
+    # budget (kernels.common) at trace time.
+    table_mode: str = "auto"     # auto | resident | streamed
 
     def __post_init__(self):
+        from repro.kernels.common import TABLE_MODES
+
         if self.evaluator not in EVALUATORS:
             raise ValueError(f"unknown evaluator {self.evaluator!r}")
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.table_mode not in TABLE_MODES:
+            raise ValueError(f"unknown table_mode {self.table_mode!r}")
 
 
 @dataclasses.dataclass
@@ -119,12 +127,14 @@ def _evaluate_segment(spec: EngineSpec, g: Graph, labels, active, it, seed,
 
 
 def _grid_propose(ell, active, n: int, eval_bucket):
-    """Shared ELL bucket plumbing: run ``eval_bucket(rows, nbr, w) ->
-    (best[R], propose[R])`` once per degree bucket over ALL of its chunks at
-    a time (one Pallas grid dispatch on the pallas backend, one vectorized
+    """Shared ELL bucket plumbing: run ``eval_bucket(rows, nbr, w, windows)
+    -> (best[R], propose[R])`` once per degree bucket over ALL of its chunks
+    at a time (one Pallas grid dispatch on the pallas backend, one vectorized
     jnp call on the ell backend — no lax.scan chain), scattering per-row
     proposals into per-vertex arrays.  Slot n is the write sink for padding /
-    non-proposing rows, so real rows (unique across buckets) never collide."""
+    non-proposing rows, so real rows (unique across buckets) never collide.
+    ``windows`` is the bucket's table-window metadata for the streamed
+    (beyond-VMEM) table layout — see DESIGN.md §Kernels."""
     from repro.graph.ell import grid_view
 
     proposal_ext = jnp.full((n + 1,), -1, jnp.int32)
@@ -133,7 +143,7 @@ def _grid_propose(ell, active, n: int, eval_bucket):
         if b.n_rows_valid == 0:
             continue  # statically empty bucket: pure-padding tiles, no work
         rows, nbr, w = grid_view(b)
-        best, good = eval_bucket(rows, nbr, w)
+        best, good = eval_bucket(rows, nbr, w, b.windows)
         row_ok = (rows < n) & active[jnp.clip(rows, 0, n - 1)]
         row_prop = row_ok & good
         idx = jnp.where(row_prop, jnp.clip(rows, 0, n - 1), n)
@@ -159,9 +169,13 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
     The per-vertex tables (labels for PLP; community/volume/size/degree for
     Louvain) are built ONCE per sweep and handed whole to the ``local_move``
     kernel family, which performs the per-neighbor gathers in-kernel — no
-    gathered (rows, W) tiles are materialized here.  ``ell`` routes through
-    the pure-jnp oracle, ``pallas`` through the fused kernel; tail vertices
-    go through the segment evaluator on pre-extracted tail edges."""
+    gathered (rows, W) tiles are materialized here; ``spec.table_mode``
+    picks VMEM-resident tables vs per-row-block windowed streaming.  ``ell``
+    routes through the pure-jnp oracle, ``pallas`` through the fused kernel.
+    Tail (above-widest-bucket) vertices go through the segment evaluator on
+    pre-extracted tail edges, gathering from the SAME once-per-sweep
+    extended tables the bucket path consumes (``moves.*_tables``) — the
+    tail's per-sweep lexsort result is scored off one shared table build."""
     from repro.kernels.local_move import ops as lm_ops
 
     n = g.n_max
@@ -171,16 +185,17 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
         noise_it = it if spec.reshuffle_ties else jnp.uint32(0)
         noise_seed = seed.astype(jnp.uint32) + noise_it
 
-        def eval_bucket(rows, nbr, w):
+        def eval_bucket(rows, nbr, w, windows):
             return lm_ops.local_move_plp(
                 rows, nbr, w, labels_ext, noise_seed,
                 tie_eps=spec.tie_eps, sentinel=n, use_pallas=use_pallas,
+                windows=windows, table_mode=spec.table_mode,
             )
 
         def eval_tail(valid_t):
-            best_score, best_lab, cur_score = moves.plp_best_labels(
-                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t, labels, n,
-                noise_it, seed, spec.tie_eps,
+            best_score, best_lab, cur_score = moves.plp_best_labels_tables(
+                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t, labels_ext,
+                n, noise_it, seed, spec.tie_eps,
             )
             return best_lab, (best_lab >= 0) & (best_score > cur_score)
 
@@ -193,18 +208,25 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
         vol_ext = jnp.concatenate([vol_com, jnp.zeros((1,), vol_com.dtype)])
         size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
         deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
+        # per-VERTEX composed tables, built ONCE per sweep and shared by
+        # every bucket dispatch (ref.compose_louvain_tables)
+        composed = lm_ops.compose_louvain_tables(
+            com_ext, vol_ext.astype(jnp.float32), size_ext,
+            deg_ext.astype(jnp.float32), n)
 
-        def eval_bucket(rows, nbr, w):
+        def eval_bucket(rows, nbr, w, windows):
             return lm_ops.local_move_louvain(
                 rows, nbr, w, com_ext, vol_ext, size_ext, deg_ext, vol_v,
                 sentinel=n, singleton_rule=spec.singleton_rule,
                 use_pallas=use_pallas,
+                windows=windows, table_mode=spec.table_mode,
+                composed=composed,
             )
 
         def eval_tail(valid_t):
-            best_gain, best_cand = moves.louvain_best_moves(
-                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t, labels, deg,
-                vol_com, size_com, vol_v, n,
+            best_gain, best_cand = moves.louvain_best_moves_tables(
+                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t,
+                com_ext, vol_ext, size_ext, deg_ext, vol_v, n,
                 singleton_rule=spec.singleton_rule,
             )
             return best_cand, vmask & (best_cand >= 0) & (best_gain > 0.0)

@@ -54,6 +54,9 @@ class LouvainConfig(ConfigBase):
     max_sweeps: int = 25        # Alg. 2 maxIteration
     sweep_threshold: int = 0    # stop local-moving when ΔN <= this
     backend: str = "segment"    # segment | ell | pallas
+    # ell/pallas table layout: VMEM-resident vs windowed streaming; "auto"
+    # resolves from the VMEM byte budget (DESIGN.md §Kernels)
+    table_mode: str = "auto"    # auto | resident | streamed
     use_need_check: bool = True
     singleton_rule: bool = True # Lu et al. swap suppression
     move_prob: float = 0.5      # Luby-style move gating (1.0 = pure Jacobi)
@@ -110,6 +113,7 @@ def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
         move_prob=float(cfg.move_prob),
         use_frontier=cfg.use_need_check,
         singleton_rule=cfg.singleton_rule,
+        table_mode=cfg.table_mode,
     )
 
 

@@ -37,11 +37,42 @@ def plp_best_labels(
     ``labels`` is the full (replicated) label array; edge arrays may be any
     static length (a local shard).  Vertices with no valid incident edge get
     best_score = -inf, best_label = -1.
+
+    Thin wrapper over ``plp_best_labels_tables`` (ONE implementation of the
+    scoring math): extending ``labels`` with the sentinel sink slot changes
+    no output — every read that could hit the sink is masked by edge/group
+    validity before use.
+    """
+    labels_ext = jnp.concatenate([labels, jnp.full((1,), n, labels.dtype)])
+    return plp_best_labels_tables(
+        src, dst, w, valid, labels_ext, n, it, seed, tie_eps)
+
+
+def plp_best_labels_tables(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    valid: jax.Array,
+    labels_ext: jax.Array,   # (n+1,) labels table, labels_ext[n] = n
+    n: int,
+    it: jax.Array,
+    seed: jax.Array,
+    tie_eps: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``plp_best_labels`` on the once-per-sweep EXTENDED label table.
+
+    Used by the ELL evaluator's high-degree tail (DESIGN.md §Kernels): the
+    fused bucket path already built ``labels_ext`` for this sweep, so the
+    tail's per-edge gathers index the same array (slot n is the sink —
+    ids in [0, n] need no clip guard) instead of re-deriving them from the
+    raw ``labels``.  Outputs are bit-identical to ``plp_best_labels``: every
+    place the sink value can differ from the raw array's clipped read is
+    masked by ``valid`` / group-validity before use.
     """
     sentinel = jnp.int32(n)
     cand_valid = valid & (src != dst)
     dst_k = jnp.where(cand_valid, dst, sentinel)
-    lab_k = jnp.where(cand_valid, labels[jnp.clip(src, 0, n - 1)], sentinel)
+    lab_k = jnp.where(cand_valid, labels_ext[jnp.clip(src, 0, n)], sentinel)
     w_v = jnp.where(cand_valid, w, 0.0)
 
     (gk, gs, gvalid, _) = seg.groupby_sum((dst_k, lab_k), w_v)
@@ -54,7 +85,7 @@ def plp_best_labels(
     best_score, best_lab = seg.segment_argmax(
         score, glab, seg_ids, num_segments=n + 1, valid=grp_ok
     )
-    cur_match = grp_ok & (glab == labels[jnp.clip(gdst, 0, n - 1)])
+    cur_match = grp_ok & (glab == labels_ext[jnp.clip(gdst, 0, n)])
     cur_score = jax.ops.segment_sum(
         jnp.where(cur_match, score, 0.0), seg_ids, num_segments=n + 1
     )
@@ -99,32 +130,70 @@ def louvain_best_moves(
 
     gain is Eq. 1 rescaled by 1/vol(V):  ΔQ = 2·gain/vol(V).
     ``com``/``deg``/``vol_com``/``size_com`` are full replicated arrays.
+
+    Thin wrapper over ``louvain_best_moves_tables`` (ONE implementation of
+    the Eq. 1 math): extending the arrays with the sentinel sink slot
+    changes no output — sink reads only occur for groups masked to -inf
+    before the argmax either way.
+    """
+    com_ext = jnp.concatenate([com, jnp.full((1,), n, com.dtype)])
+    vol_ext = jnp.concatenate([vol_com, jnp.zeros((1,), vol_com.dtype)])
+    size_ext = jnp.concatenate([size_com, jnp.zeros((1,), size_com.dtype)])
+    deg_ext = jnp.concatenate([deg, jnp.zeros((1,), deg.dtype)])
+    return louvain_best_moves_tables(
+        src, dst, w, valid, com_ext, vol_ext, size_ext, deg_ext, vol_v, n,
+        singleton_rule=singleton_rule)
+
+
+def louvain_best_moves_tables(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    valid: jax.Array,
+    com_ext: jax.Array,    # (n+1,) community table, com_ext[n] = n
+    vol_ext: jax.Array,    # (n+1,) community volumes, vol_ext[n] = 0
+    size_ext: jax.Array,   # (n+1,) community sizes, size_ext[n] = 0
+    deg_ext: jax.Array,    # (n+1,) weighted degrees, deg_ext[n] = 0
+    vol_v: jax.Array,
+    n: int,
+    singleton_rule: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """``louvain_best_moves`` on the once-per-sweep EXTENDED tables.
+
+    Used by the ELL evaluator's high-degree tail (DESIGN.md §Kernels): the
+    fused bucket path already built com/vol/size/deg_ext for this sweep, so
+    the tail's gathers index the same arrays (sink slot n) instead of the
+    raw com/vol_com/size_com/deg with clip guards.  Bit-identical to
+    ``louvain_best_moves``: sink reads only occur for invalid groups, whose
+    gain is masked to -inf before the argmax either way.
     """
     sentinel = jnp.int32(n)
     cand_valid = valid & (src != dst)
     dst_k = jnp.where(cand_valid, dst, sentinel)
-    cand_k = jnp.where(cand_valid, com[jnp.clip(src, 0, n - 1)], sentinel)
+    cand_k = jnp.where(cand_valid, com_ext[jnp.clip(src, 0, n)], sentinel)
     w_v = jnp.where(cand_valid, w, 0.0)
 
     (gk, gs, gvalid, _) = seg.groupby_sum((dst_k, cand_k), w_v)
     gdst, gcand = gk
     grp_ok = gvalid & (gdst < sentinel) & (gcand < sentinel)
 
-    gdst_c = jnp.clip(gdst, 0, n - 1)
+    gdst_e = jnp.clip(gdst, 0, n)
     seg_ids = jnp.where(grp_ok, gdst, n)
-    A = com[gdst_c]
-    deg_d = deg[gdst_c]
+    A = com_ext[gdst_e]
+    deg_d = deg_ext[gdst_e]
     s_to_A = jax.ops.segment_sum(
         jnp.where(grp_ok & (gcand == A), gs, 0.0), seg_ids, num_segments=n + 1
     )[:n]
 
-    cand_c = jnp.clip(gcand, 0, n - 1)
-    vol_B_minus = vol_com[cand_c] - jnp.where(gcand == A, deg_d, 0.0)
-    vol_A_minus = vol_com[jnp.clip(A, 0, n - 1)] - deg_d
-    gain = (gs - s_to_A[gdst_c]) - deg_d * (vol_B_minus - vol_A_minus) / vol_v
+    cand_e = jnp.clip(gcand, 0, n)
+    A_e = jnp.clip(A, 0, n)
+    vol_B_minus = vol_ext[cand_e] - jnp.where(gcand == A, deg_d, 0.0)
+    vol_A_minus = vol_ext[A_e] - deg_d
+    gain = (gs - s_to_A[jnp.clip(gdst, 0, n - 1)]
+            ) - deg_d * (vol_B_minus - vol_A_minus) / vol_v
 
     if singleton_rule:
-        both_single = (size_com[jnp.clip(A, 0, n - 1)] == 1) & (size_com[cand_c] == 1)
+        both_single = (size_ext[A_e] == 1) & (size_ext[cand_e] == 1)
         gain = jnp.where(both_single & (gcand > A), -jnp.inf, gain)
 
     gain = jnp.where(grp_ok & (gcand != A), gain, -jnp.inf)

@@ -44,6 +44,9 @@ class PLPConfig(ConfigBase):
     reshuffle_ties: bool = False
     move_prob: float = 0.75     # Luby-style move gating (1.0 = pure Jacobi)
     fused: bool = True          # one while_loop call vs per-sweep dispatch
+    # ell/pallas table layout: VMEM-resident vs windowed streaming; "auto"
+    # resolves from the VMEM byte budget (DESIGN.md §Kernels)
+    table_mode: str = "auto"    # auto | resident | streamed
 
 
 @dataclasses.dataclass
@@ -65,6 +68,7 @@ def engine_spec(cfg: PLPConfig) -> EngineSpec:
         move_prob=float(cfg.move_prob),
         use_frontier=cfg.use_frontier,
         reshuffle_ties=cfg.reshuffle_ties,
+        table_mode=cfg.table_mode,
     )
 
 

@@ -94,9 +94,20 @@ def build_ell(
     max_w = widths[-1]
     buckets: List[EllBucket] = []
     prev = 0
+    # prefix sums of the (dst, src)-sorted neighbor ids: per-row neighbor
+    # min is the first entry of the run, the mean comes from the cumsum
+    src_cum = np.concatenate([[0.0], np.cumsum(src, dtype=np.float64)])
     for W in widths:
         vids = np.where((deg > prev) & (deg <= W))[0]
         prev = W
+        if len(vids):
+            # neighbor-ID locality order (Sahu, arXiv:2301.12390): rows whose
+            # neighborhoods touch nearby vertex ids become adjacent, so each
+            # row-block of the streamed kernel reads a narrow table window
+            lo_n = src[row_ptr[vids]]          # in-row neighbors are sorted
+            mean_n = ((src_cum[row_ptr[vids + 1]] - src_cum[row_ptr[vids]])
+                      / deg[vids])
+            vids = vids[np.lexsort((vids, mean_n, lo_n))]
         R = int(np.ceil(max(1, len(vids)) / ROW_PAD) * ROW_PAD)
         rows = np.full(R, n, dtype=np.int32)
         nbr = np.full((R, W), n, dtype=np.int32)
@@ -143,7 +154,74 @@ def _rows_per_chunk(width: int, target_elems: int = CHUNK_ELEMS) -> int:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["rows", "nbr", "w"],
+    data_fields=["win_blk"],
+    meta_fields=["slot", "block_rows", "n_slots"],
+)
+@dataclasses.dataclass(frozen=True)
+class TableWindows:
+    """Per-row-block table-window metadata for the streamed local_move path.
+
+    Block b of ``block_rows`` consecutive (locality-ordered) rows touches
+    vertex ids within [win_blk[b]·slot, win_blk[b]·slot + 2·slot): the
+    streamed kernel DMAs exactly that slice of each per-vertex table per
+    grid step (DESIGN.md §Kernels).  ``slot`` (the window offset stride,
+    a multiple of the 128-entry lane) and ``n_slots`` (rows of the
+    overlapped (n_slots, 2·slot) table view) are STATIC; ``win_blk`` is the
+    int32[n_blocks] slot index per block, consumed as a scalar-prefetch
+    operand.  Padding/sentinel ids are masked in the kernel and need no
+    window coverage.
+    """
+
+    win_blk: jax.Array
+    slot: int
+    block_rows: int
+    n_slots: int
+
+
+def compute_windows(rows: np.ndarray, nbr: np.ndarray, n_max: int,
+                    block_rows: int) -> TableWindows:
+    """Host-side window build over a bucket's flattened (R,)/(R, W) tiles.
+
+    Per block of ``block_rows`` rows: [lo, hi) spans every REAL id the block
+    touches (row ids and neighbor ids; sentinel padding excluded).  The slot
+    stride is the max block span rounded up to the lane width, so every
+    block's span fits one 2-slot overlapped window regardless of alignment.
+    """
+    from repro.kernels.common import TABLE_LANE, cdiv
+
+    R = rows.shape[0]
+    nb = max(1, cdiv(R, block_rows))
+    pad = nb * block_rows - R
+    rows_p = np.concatenate([rows, np.full(pad, n_max, rows.dtype)])
+    nbr_p = np.concatenate(
+        [nbr, np.full((pad, nbr.shape[1]), n_max, nbr.dtype)])
+    rows2 = rows_p.reshape(nb, block_rows)
+    nbr2 = nbr_p.reshape(nb, block_rows, -1)
+
+    lo = np.minimum(
+        np.where(rows2 < n_max, rows2, n_max).min(axis=1),
+        np.where(nbr2 < n_max, nbr2, n_max).min(axis=(1, 2)),
+    ).astype(np.int64)
+    hi = np.maximum(
+        np.where(rows2 < n_max, rows2, -1).max(axis=1),
+        np.where(nbr2 < n_max, nbr2, -1).max(axis=(1, 2)),
+    ).astype(np.int64) + 1
+    empty = hi <= lo          # all-padding block: any window works
+    lo[empty], hi[empty] = 0, 1
+
+    span = int((hi - lo).max())
+    slot = int(np.ceil(max(span, 1) / TABLE_LANE) * TABLE_LANE)
+    return TableWindows(
+        win_blk=jnp.asarray((lo // slot).astype(np.int32)),
+        slot=slot,
+        block_rows=int(block_rows),
+        n_slots=max(1, cdiv(n_max + 1, slot)),
+    )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "nbr", "w", "windows"],
     meta_fields=["width", "n_rows_valid"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +235,9 @@ class DeviceBucket:
     ``n_rows_valid`` is STATIC (a pytree meta field): the host-side bucketing
     knows how many rows are real, so the sweep engine can skip all-padding
     buckets at trace time instead of evaluating pure-sentinel tiles.
+    ``windows`` is the per-row-block table-window metadata enabling the
+    streamed (beyond-VMEM) kernel path; None for hand-built buckets, which
+    then support the resident path only.
     """
 
     rows: jax.Array
@@ -164,6 +245,7 @@ class DeviceBucket:
     w: jax.Array
     width: int
     n_rows_valid: int = -1  # -1 = unknown (treated as non-empty)
+    windows: Optional[TableWindows] = None
 
 
 def grid_view(b: DeviceBucket) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -200,8 +282,18 @@ class DeviceEll:
     has_tail: bool
 
 
-def to_device(g: Graph, e: EllGraph, rows_per_chunk: Optional[int] = None) -> DeviceEll:
-    """Stack an EllGraph into the device-resident scan layout (one-time cost)."""
+def to_device(g: Graph, e: EllGraph, rows_per_chunk: Optional[int] = None,
+              block_rows: Optional[int] = None) -> DeviceEll:
+    """Stack an EllGraph into the device-resident scan layout (one-time cost).
+
+    ``block_rows`` overrides the streamed-path row-block granularity (and
+    thereby the window size).  The default is ``pick_row_block_fused(W)``
+    with no table charge — the UPPER BOUND of the resident row block, which
+    the resident path shrinks further by its table-scratch bytes — so the
+    streamed grid is at least as coarse as the resident one.
+    """
+    from repro.kernels.common import pick_row_block_fused
+
     n = e.n_max
     buckets: List[DeviceBucket] = []
     for b in e.buckets:
@@ -214,6 +306,7 @@ def to_device(g: Graph, e: EllGraph, rows_per_chunk: Optional[int] = None) -> De
         ww = np.zeros((r_pad, W), dtype=np.float32)
         rows[:r], nbr[:r], ww[:r] = b.rows, b.nbr, b.w
         c = r_pad // rc
+        br = min(block_rows or pick_row_block_fused(W), r_pad)
         buckets.append(
             DeviceBucket(
                 rows=jnp.asarray(rows.reshape(c, rc)),
@@ -221,6 +314,7 @@ def to_device(g: Graph, e: EllGraph, rows_per_chunk: Optional[int] = None) -> De
                 w=jnp.asarray(ww.reshape(c, rc, W)),
                 width=W,
                 n_rows_valid=b.n_rows_valid,
+                windows=compute_windows(rows, nbr, n, br),
             )
         )
 

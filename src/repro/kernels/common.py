@@ -1,8 +1,23 @@
 """Shared kernel utilities."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
+
+# Default per-core VMEM capacity assumed by the budget policy (~16 MB/core on
+# contemporary TPUs).  Override per TPU generation with the
+# REPRO_VMEM_BUDGET_BYTES environment variable or the ``budget_bytes`` kwargs.
+DEFAULT_VMEM_BUDGET_BYTES = 16 << 20
+VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET_BYTES"
+
+TABLE_MODES = ("auto", "resident", "streamed")
+
+# Table padding / window-offset granularity (the TPU lane width): resident
+# table scratch is padded to a multiple of this, and streamed window offsets
+# are multiples of the per-bucket slot stride, itself a multiple of this.
+TABLE_LANE = 128
 
 
 def cdiv(a: int, b: int) -> int:
@@ -12,6 +27,19 @@ def cdiv(a: int, b: int) -> int:
 def default_interpret() -> bool:
     """Pallas interpret mode: True unless running on a real TPU."""
     return jax.default_backend() != "tpu"
+
+
+def vmem_budget_bytes(budget_bytes: int | None = None) -> int:
+    """Resolve the per-core VMEM byte budget.
+
+    Precedence: explicit kwarg > REPRO_VMEM_BUDGET_BYTES env var > the
+    built-in ~16 MB default.  Read at trace time, so the resident/streamed
+    decision and row-block sizing are static per compiled program.
+    """
+    if budget_bytes is not None:
+        return int(budget_bytes)
+    env = os.environ.get(VMEM_BUDGET_ENV)
+    return int(env) if env else DEFAULT_VMEM_BUDGET_BYTES
 
 
 def pick_row_block(width: int, budget_elems: int = 1 << 21,
@@ -25,16 +53,46 @@ def pick_row_block(width: int, budget_elems: int = 1 << 21,
     return r
 
 
-def pick_row_block_fused(width: int, budget_elems: int = 1 << 21) -> int:
+def pick_row_block_fused(width: int, budget_bytes: int | None = None,
+                         table_bytes: int = 0) -> int:
     """Row block for the gather-in-kernel local_move grid.
 
     Unlike the scored-tile kernels, the fused kernel receives no gathered
-    (R_blk, W) input tiles — its per-step VMEM footprint is the neighbor tile
-    plus the shared table scratch — so narrow buckets can afford much taller
-    blocks under the same (R_blk, W, W) pairwise budget.  Fewer grid steps
-    amortize the table residency (and, in interpret mode, the per-step
-    dispatch) across the whole bucket."""
-    return pick_row_block(width, budget_elems, max_rows=2048)
+    (R_blk, W) input tiles — its per-step VMEM footprint is the (R_blk, W, W)
+    pairwise tensor plus whatever table state is resident — so narrow buckets
+    can afford much taller blocks.  Fewer grid steps amortize the table
+    residency (and, in interpret mode, the per-step dispatch).
+
+    ``table_bytes`` (the resident table scratch, or the streamed double-
+    buffered windows) is charged against half the VMEM budget before sizing
+    the pairwise tensor; the other half is reserved for Pallas's
+    double-buffered tile pipeline.  With the default budget and no tables
+    this reduces to the historical ~8 MB pairwise budget.  The pairwise
+    budget is floored at budget//8: when the tables ALONE bust the half
+    budget the layout cannot fit VMEM no matter the row block (that regime
+    is streamed-or-bust), so collapsing to 1-row grid steps would add a
+    pathological grid without recovering anything.
+    """
+    budget = vmem_budget_bytes(budget_bytes)
+    avail = max(budget // 2 - table_bytes, budget // 8)
+    return pick_row_block(width, max(1, avail // 4), max_rows=2048)
+
+
+def resolve_table_mode(mode: str, table_bytes: int,
+                       budget_bytes: int | None = None) -> str:
+    """Resident-vs-streamed policy for the local_move per-vertex tables.
+
+    ``auto`` keeps the tables VMEM-resident while they fit HALF the VMEM
+    budget (the other half covers the pairwise tensor and the
+    double-buffered tile pipeline) and streams per-block windows beyond
+    that: resident  iff  table_bytes <= vmem_budget_bytes() // 2.
+    """
+    if mode not in TABLE_MODES:
+        raise ValueError(f"unknown table_mode {mode!r}, want one of {TABLE_MODES}")
+    if mode != "auto":
+        return mode
+    return ("resident" if table_bytes <= vmem_budget_bytes(budget_bytes) // 2
+            else "streamed")
 
 
 def hash_u32_jnp(x: jax.Array) -> jax.Array:

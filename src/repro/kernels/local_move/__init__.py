@@ -2,10 +2,13 @@
 
 One kernel family replaces the gather→``label_argmax``/``delta_q_argmax``
 two-step of the ELL evaluator: the kernel receives the ELL neighbor tiles
-blocked into VMEM plus the WHOLE per-vertex tables (labels / community /
-volume / size / degree) resident in the ANY memory space, performs the
-per-neighbor gathers inside the kernel, and emits ``(proposal, propose)``
-directly — no gathered (rows, W) intermediates ever hit HBM.
+blocked into VMEM plus the per-vertex tables (labels / community / volume /
+size / degree) — either WHOLE in the ANY memory space (VMEM-resident fast
+path) or as per-row-block WINDOWS streamed by the Pallas pipeline under a
+parallel grid (beyond-VMEM path; selection via the VMEM byte budget in
+``kernels.common``) — performs the per-neighbor gathers inside the kernel,
+and emits ``(proposal, propose)`` directly — no gathered (rows, W)
+intermediates ever hit HBM.
 
 Layout mirrors the sibling kernels: kernel.py (pl.pallas_call + BlockSpec),
 ops.py (plain jit-safe dispatch wrapper), ref.py (pure-jnp oracle reusing the

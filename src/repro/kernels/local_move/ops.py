@@ -9,21 +9,41 @@ Inputs accept any leading shape — ``rows`` may be the chunk-stacked
 (n_chunks, rows) layout of ``graph/ell.DeviceEll`` or already flat; the
 wrapper collapses leading dims so the Pallas grid spans all chunks of the
 bucket, and reshapes the outputs back.
+
+Table layout selection (DESIGN.md §Kernels): ``table_mode`` picks between
+the VMEM-RESIDENT fast path and the WINDOWED STREAMED path; ``auto``
+resolves from the VMEM byte budget (``kernels.common.resolve_table_mode``)
+at trace time.  Streaming needs the per-row-block window metadata
+(``graph.ell.TableWindows``, passed duck-typed so the kernel layer stays
+free of graph-layer imports); without it the resident path is used.  Both
+pallas layouts and both pure-jnp oracles are bit-identical — the windowed
+oracle slices the same windows with ``lax.dynamic_slice`` and runs the SAME
+per-block ref the streamed kernel body runs.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import default_interpret
+from repro.kernels.common import (
+    TABLE_LANE,
+    default_interpret,
+    resolve_table_mode,
+)
 from repro.kernels.local_move.kernel import (
+    _check_windows,
+    _pad_tiles,
     local_move_louvain_pallas,
+    local_move_louvain_pallas_streamed,
     local_move_plp_pallas,
+    local_move_plp_pallas_streamed,
+    window_flat,
 )
 from repro.kernels.local_move.ref import (
-    local_move_louvain_ref,
+    compose_louvain_tables,
+    local_move_louvain_tables_ref,
     local_move_plp_ref,
 )
 
@@ -37,6 +57,63 @@ def _flatten(rows, nbr, w):
     )
 
 
+def _resolve_mode(table_mode: str, windows, n_tables: int, sentinel: int,
+                  vmem_budget: Optional[int]) -> str:
+    """Static resident-vs-streamed decision for one dispatch.
+
+    ``auto`` additionally requires the STREAMED footprint to earn its keep:
+
+    * the window must be narrower than the table — with poor id-locality
+      one outlier row inflates the per-bucket slot stride to the whole id
+      range (``TableWindows`` docstring), and a 2-slot window ≥ the table
+      would re-read the full table per grid step, strictly worse than the
+      resident one-shot DMA;
+    * the double-buffered windows (2 live buffers of 2·slot entries per
+      table) must fit the same half-budget bound the resident tables were
+      tested against — mediocre locality past the resident budget would
+      otherwise stream windows that bust VMEM just the same.
+
+    Failing either check falls back to resident (on a real TPU a
+    past-budget resident layout may still fail to compile — the fix is
+    better locality or a finer ``block_rows``, see DESIGN.md §Kernels).
+    Explicit ``table_mode='streamed'`` is honored unchecked (the
+    degenerate-window parity tests rely on it).
+    """
+    if windows is None:
+        if table_mode == "streamed":
+            raise ValueError(
+                "table_mode='streamed' requires window metadata "
+                "(graph.ell.TableWindows); build buckets via to_device()")
+        return "resident"
+    n_pad = -(-(sentinel + 1) // TABLE_LANE) * TABLE_LANE
+    mode = resolve_table_mode(table_mode, 4 * n_tables * n_pad, vmem_budget)
+    if mode == "streamed" and table_mode == "auto":
+        win_bytes = 4 * n_tables * (2 * windows.slot) * 2  # 2 = live buffers
+        if (2 * windows.slot >= n_pad
+                or resolve_table_mode("auto", win_bytes, vmem_budget)
+                != "resident"):
+            return "resident"
+    return mode
+
+
+def _blocked(windows, rows, nbr, w, sentinel: int):
+    """Reshape flat tiles into the (n_blocks, block_rows, ·) window layout
+    (same metadata validation as the Pallas streamed path)."""
+    R, W = nbr.shape
+    nb = _check_windows(windows, R)
+    r_blk = windows.block_rows
+    rows, nbr, w, _ = _pad_tiles(rows, nbr, w, r_blk, sentinel)
+    return (rows.reshape(nb, r_blk), nbr.reshape(nb, r_blk, W),
+            w.reshape(nb, r_blk, W), R)
+
+
+def _window_flat(tab, windows, fill):
+    """Flat table padded so every 2-slot window slice is in range — the
+    SAME padding step (kernel.window_flat) the overlapped BlockSpec view is
+    built from."""
+    return window_flat(tab, windows.slot, windows.n_slots, fill)
+
+
 def local_move_plp(
     rows: jax.Array,        # (..., ) int32 vertex id per row
     nbr: jax.Array,         # (..., W) int32 neighbor ids
@@ -48,18 +125,46 @@ def local_move_plp(
     sentinel: int,
     use_pallas: bool = False,
     interpret: bool | None = None,
+    windows=None,                       # graph.ell.TableWindows | None
+    table_mode: str = "auto",           # auto | resident | streamed
+    vmem_budget: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """(best_label, propose) per row, gathers fused into the evaluator."""
     lead = rows.shape
     rows_f, nbr_f, w_f = _flatten(rows, nbr, w)
     labels_ext = labels_ext.astype(jnp.int32)
+    mode = _resolve_mode(table_mode, windows, 1, sentinel, vmem_budget)
     if use_pallas:
         interp = default_interpret() if interpret is None else interpret
-        best, prop = local_move_plp_pallas(
-            rows_f, nbr_f, w_f, labels_ext, seed,
-            tie_eps=tie_eps, sentinel=sentinel, interpret=interp,
-        )
+        if mode == "streamed":
+            best, prop = local_move_plp_pallas_streamed(
+                rows_f, nbr_f, w_f, labels_ext, seed,
+                tie_eps=tie_eps, sentinel=sentinel, interpret=interp,
+                windows=windows,
+            )
+        else:
+            best, prop = local_move_plp_pallas(
+                rows_f, nbr_f, w_f, labels_ext, seed,
+                tie_eps=tie_eps, sentinel=sentinel, interpret=interp,
+                vmem_budget=vmem_budget,
+            )
         prop = prop != 0
+    elif mode == "streamed":
+        # pure-jnp windowed oracle: per block, slice the SAME 2-slot window
+        # the streamed kernel's BlockSpec lands and run the SAME ref body
+        R = rows_f.shape[0]
+        rows_b, nbr_b, w_b, _ = _blocked(windows, rows_f, nbr_f, w_f, sentinel)
+        flat = _window_flat(labels_ext, windows, sentinel)
+        S = windows.slot
+
+        def one(r_, nb_, w_, k):
+            winv = jax.lax.dynamic_slice(flat, (k * S,), (2 * S,))
+            return local_move_plp_ref(
+                r_, nb_, w_, winv, seed,
+                tie_eps=tie_eps, sentinel=sentinel, win_lo=k * S)
+
+        best, prop = jax.vmap(one)(rows_b, nbr_b, w_b, windows.win_blk)
+        best, prop = best.reshape(-1)[:R], prop.reshape(-1)[:R]
     else:
         best, prop = local_move_plp_ref(
             rows_f, nbr_f, w_f, labels_ext, seed,
@@ -82,25 +187,67 @@ def local_move_louvain(
     singleton_rule: bool = True,
     use_pallas: bool = False,
     interpret: bool | None = None,
+    windows=None,                       # graph.ell.TableWindows | None
+    table_mode: str = "auto",           # auto | resident | streamed
+    vmem_budget: int | None = None,
+    composed=None,                      # per-vertex composed table 4-tuple
 ) -> Tuple[jax.Array, jax.Array]:
-    """(best_community, propose) per row; gain test is Eq. 1 > 0."""
+    """(best_community, propose) per row; gain test is Eq. 1 > 0.
+
+    ``composed`` lets a caller evaluating MANY buckets per sweep (the ELL
+    engine) pass the per-vertex composed tables of
+    ``ref.compose_louvain_tables`` built ONCE per sweep, instead of this
+    wrapper re-composing them per bucket dispatch.
+    """
     lead = rows.shape
     rows_f, nbr_f, w_f = _flatten(rows, nbr, w)
-    com_ext = com_ext.astype(jnp.int32)
-    vol_ext = vol_ext.astype(jnp.float32)
-    size_ext = size_ext.astype(jnp.int32)
-    deg_ext = deg_ext.astype(jnp.float32)
     inv_vol = (1.0 / vol_total).astype(jnp.float32)
+    if composed is None:
+        composed = compose_louvain_tables(
+            com_ext.astype(jnp.int32), vol_ext.astype(jnp.float32),
+            size_ext.astype(jnp.int32), deg_ext.astype(jnp.float32),
+            sentinel)
+    com_v, volcom_v, sizecom_v, deg_v = composed
+    mode = _resolve_mode(table_mode, windows, 4, sentinel, vmem_budget)
     if use_pallas:
         interp = default_interpret() if interpret is None else interpret
-        best, prop = local_move_louvain_pallas(
-            rows_f, nbr_f, w_f, com_ext, vol_ext, size_ext, deg_ext, inv_vol,
-            sentinel=sentinel, singleton_rule=singleton_rule, interpret=interp,
-        )
+        if mode == "streamed":
+            best, prop = local_move_louvain_pallas_streamed(
+                rows_f, nbr_f, w_f, com_v, volcom_v, sizecom_v, deg_v,
+                inv_vol, sentinel=sentinel, singleton_rule=singleton_rule,
+                interpret=interp, windows=windows,
+            )
+        else:
+            best, prop = local_move_louvain_pallas(
+                rows_f, nbr_f, w_f, com_v, volcom_v, sizecom_v, deg_v,
+                inv_vol, sentinel=sentinel, singleton_rule=singleton_rule,
+                interpret=interp, vmem_budget=vmem_budget,
+            )
         prop = prop != 0
+    elif mode == "streamed":
+        R = rows_f.shape[0]
+        rows_b, nbr_b, w_b, _ = _blocked(windows, rows_f, nbr_f, w_f, sentinel)
+        flats = (
+            _window_flat(com_v, windows, sentinel),
+            _window_flat(volcom_v, windows, 0),
+            _window_flat(sizecom_v, windows, 0),
+            _window_flat(deg_v, windows, 0),
+        )
+        S = windows.slot
+
+        def one(r_, nb_, w_, k):
+            wins = tuple(
+                jax.lax.dynamic_slice(f, (k * S,), (2 * S,)) for f in flats)
+            return local_move_louvain_tables_ref(
+                r_, nb_, w_, *wins, inv_vol,
+                sentinel=sentinel, singleton_rule=singleton_rule,
+                win_lo=k * S)
+
+        best, prop = jax.vmap(one)(rows_b, nbr_b, w_b, windows.win_blk)
+        best, prop = best.reshape(-1)[:R], prop.reshape(-1)[:R]
     else:
-        best, prop = local_move_louvain_ref(
-            rows_f, nbr_f, w_f, com_ext, vol_ext, size_ext, deg_ext, inv_vol,
+        best, prop = local_move_louvain_tables_ref(
+            rows_f, nbr_f, w_f, com_v, volcom_v, sizecom_v, deg_v, inv_vol,
             sentinel=sentinel, singleton_rule=singleton_rule,
         )
     return best.reshape(lead), prop.reshape(lead)
