@@ -32,6 +32,14 @@ bucket width, with per-bucket window stats and a bit-identical check —
 
   PYTHONPATH=src python -m benchmarks.perf_variants table_streaming com-dblp \
       algo=both repeat=3 block_rows=512
+
+Coarse-cascade mode (DESIGN.md §Pipeline): time the capacity-scheduled
+cascade against the fixed-capacity pipeline and the per-level driver, with
+the paper-style Fig. 4 level-0 vs aggregation+coarse-tail split, the number
+of compiled stage programs, and a bit-identical check —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants coarse_cascade \
+      com-amazon algo=louvain repeat=3 backend=ell
 """
 import json
 import os
@@ -574,9 +582,152 @@ def run_table_streaming(dataset: str = "com-dblp", algo: str = "both",
     return out
 
 
+def run_coarse_cascade(dataset: str = "com-amazon", algo: str = "louvain",
+                       repeat: int = 3, backend: str = "ell"):
+    """Capacity-scheduled coarse-level cascade vs the fixed-capacity pipeline
+    vs the per-level driver (DESIGN.md §Pipeline).
+
+    Three whole-run arms, bit-identical by contract (tests/test_cascade.py):
+
+      * ``cascade``   — ``capacity_schedule`` enabled: coarse levels descend
+                        through shrinking static capacities; on ell/pallas
+                        the traced per-stage re-bucketing keeps the fused
+                        local_move kernels on every level.
+      * ``fixed``     — ``capacity_schedule="none"``: today's single
+                        full-capacity program (the parity oracle).
+      * ``per_level`` — ``pipeline_fused=False``: one dispatch per level,
+                        aggregation on host.
+
+    Reports interleaved best-of totals, the Fig. 4-style phase split
+    (level-0 local-moving vs everything after it — aggregation + coarse
+    levels — the part the cascade shrinks), the executed stage capacities,
+    and the number of stage programs compiled for the cascade (must stay
+    within the schedule bound).
+    """
+    import importlib
+    import time
+
+    louvain_mod = importlib.import_module("repro.core.louvain")
+    from repro.core.louvain import LouvainConfig, leiden, louvain
+    from repro.graph import datasets
+
+    lg = datasets.load(dataset)
+    g = lg.graph
+    sched = louvain_mod.auto_capacity_schedule(g.n_max, g.m_max)
+    if len(sched) == 1:
+        # tiny smoke-scale graphs degenerate under the auto floors; force a
+        # scaled-down schedule so the cascade path itself is exercised
+        sched = louvain_mod.auto_capacity_schedule(
+            g.n_max, g.m_max, min_n=0,
+            n_floor=max(32, g.n_max // 16), m_floor=max(128, g.m_max // 16))
+    out = {"mode": "coarse_cascade", "dataset": dataset, "V": lg.n,
+           "E": lg.m_undirected, "backend": backend,
+           "schedule": [list(c) for c in sched]}
+
+    algos = ("louvain", "leiden") if algo == "both" else (algo,)
+    for name in algos:
+        run = leiden if name == "leiden" else louvain
+        base = LouvainConfig(track_modularity=False, backend=backend)
+        cfgs = {
+            "cascade": base.replace(capacity_schedule=sched),
+            "fixed": base.replace(capacity_schedule="none"),
+            "per_level": base.replace(capacity_schedule="none",
+                                      pipeline_fused=False),
+        }
+        # warm (compile) each arm; the deterministic stage-program count is
+        # the number of capacities entered (one program each) — the
+        # cache-miss delta only counts NEW compiles and is run-order
+        # dependent across datasets sharing a stage key
+        miss0 = louvain_mod._stage_fn.cache_info().misses
+        res = {"cascade": run(g, cfgs["cascade"])}
+        out[f"{name}_stage_programs"] = len(res["cascade"].cascade_stages)
+        out[f"{name}_stage_programs_newly_compiled"] = (
+            louvain_mod._stage_fn.cache_info().misses - miss0)
+        res["fixed"] = run(g, cfgs["fixed"])
+        res["per_level"] = run(g, cfgs["per_level"])
+        lvl0_cfg = cfgs["fixed"].replace(max_levels=1)
+        run(g, lvl0_cfg)
+
+        same = all(
+            bool(jnp.array_equal(jnp.asarray(res[k].labels),
+                                 jnp.asarray(res["fixed"].labels)))
+            and res[k].levels == res["fixed"].levels
+            and res[k].sweeps_per_level == res["fixed"].sweeps_per_level
+            and res[k].n_comm_per_level == res["fixed"].n_comm_per_level
+            for k in ("cascade", "per_level"))
+        out[f"{name}_bit_identical"] = same
+
+        # interleaved best-of timing so drift biases no arm; the level-0-only
+        # run isolates the peeled level for the Fig. 4-style split
+        timed = dict(cfgs, level0=lvl0_cfg)
+        best = {k: None for k in timed}
+        for _ in range(repeat):
+            for k, c in timed.items():
+                t0 = time.perf_counter()
+                run(g, c)
+                dt = time.perf_counter() - t0
+                best[k] = dt if best[k] is None else min(best[k], dt)
+        for k, t in best.items():
+            out[f"{name}_{k}_s"] = t
+        out[f"{name}_cascade_speedup_vs_fixed"] = (
+            best["fixed"] / best["cascade"])
+        out[f"{name}_cascade_speedup_vs_per_level"] = (
+            best["per_level"] / best["cascade"])
+        # everything after the peeled level 0 = aggregation + coarse levels,
+        # the phase the capacity schedule shrinks (Fig. 4 phase breakdown)
+        tail_c = best["cascade"] - best["level0"]
+        tail_f = best["fixed"] - best["level0"]
+        out[f"{name}_cascade_coarse_tail_s"] = tail_c
+        out[f"{name}_fixed_coarse_tail_s"] = tail_f
+        out[f"{name}_coarse_tail_speedup"] = (
+            tail_f / tail_c if tail_c > 0 else None)
+
+        r = res["cascade"]
+        out[f"{name}_levels"] = r.levels
+        out[f"{name}_n_comm_per_level"] = r.n_comm_per_level
+        out[f"{name}_cascade_stages"] = [list(c) for c in r.cascade_stages]
+
+        # per-level local-moving vs aggregation share from the per-level
+        # driver's level-tagged timers (context for the fig4 comparison)
+        res_t = run(g, cfgs["per_level"].replace(per_level_timing=True))
+        split = []
+        for level in range(res_t.levels):
+            lm = res_t.timer.totals.get(f"L{level:02d}/local_moving", 0.0)
+            ag = res_t.timer.totals.get(f"L{level:02d}/aggregation", 0.0)
+            tot = lm + ag or 1e-12
+            split.append({"level": level, "local_moving_s": lm,
+                          "aggregation_s": ag,
+                          "aggregation_share": ag / tot})
+        out[f"{name}_phase_split"] = split
+
+    # compact micro-benchmark on this graph's edge arrays: the stable
+    # front-compaction primitive (graph/segment.py::compact), one
+    # cumsum/scatter permutation vs the legacy full argsort
+    import jax
+
+    from repro.graph import segment as seg
+
+    fns = {how: jax.jit(lambda m_, a_, b_, how=how: seg.compact(
+        m_, (a_, b_), via=how)[0]) for how in ("scatter", "argsort")}
+    for how, f in fns.items():
+        jax.block_until_ready(f(g.edge_mask, g.src, g.w))   # warm
+        t_best = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(g.edge_mask, g.src, g.w))
+            dt = time.perf_counter() - t0
+            t_best = dt if t_best is None else min(t_best, dt)
+        out[f"compact_{how}_s"] = t_best
+    out["compact_scatter_speedup"] = (
+        out["compact_argsort_s"] / out["compact_scatter_s"])
+    print(json.dumps(out, indent=1))
+    return out
+
+
 _MODES = {"community": run_community, "level_fusion": run_level_fusion,
           "gather_fusion": run_gather_fusion,
-          "table_streaming": run_table_streaming}
+          "table_streaming": run_table_streaming,
+          "coarse_cascade": run_coarse_cascade}
 
 
 def main():

@@ -16,6 +16,10 @@
   table_streaming — windowed streamed table layout vs the VMEM-resident
             fast path vs two-step, per bucket width, with window stats
             (artifact: BENCH_table_streaming.json)
+  coarse_cascade — capacity-scheduled coarse-level cascade vs the
+            fixed-capacity pipeline vs per-level, with the Fig. 4 level-0 /
+            coarse-tail split, stage-program count and bit-identical check
+            (artifact: BENCH_coarse_cascade.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -317,6 +321,38 @@ def bench_table_streaming(datasets=("com-dblp",)):
     return rows
 
 
+# ------------------------------------------------------------------ coarse cascade
+
+
+def bench_coarse_cascade(datasets=("com-amazon",)):
+    """Capacity-scheduled cascade vs fixed-capacity pipeline vs per-level
+    driver (DESIGN.md §Pipeline) — the measurement behind the shrink-aware
+    coarse-level machinery.  com-amazon is the deep-hierarchy dataset the
+    issue targets (10 coarsening levels on the stand-in)."""
+    from benchmarks.perf_variants import run_coarse_cascade
+    rows = []
+    for name in datasets:
+        rec = run_coarse_cascade(name, algo="louvain", repeat=3)
+        rows.append(rec)
+        sp = rec["louvain_cascade_speedup_vs_fixed"]
+        ts = rec["louvain_coarse_tail_speedup"]
+        print(f"[coarse_cascade] {name:18s} "
+              f"fixed {rec['louvain_fixed_s']:.3f}s -> "
+              f"cascade {rec['louvain_cascade_s']:.3f}s ({sp:.2f}x)  "
+              f"coarse+agg tail {rec['louvain_fixed_coarse_tail_s']:.3f}s -> "
+              f"{rec['louvain_cascade_coarse_tail_s']:.3f}s "
+              f"({ts and f'{ts:.2f}x' or 'n/a'})  "
+              f"stages={[c[0] for c in rec['louvain_cascade_stages']]} "
+              f"programs={rec['louvain_stage_programs']}"
+              f"<={len(rec['schedule'])}  "
+              f"bit_identical={rec['louvain_bit_identical']}")
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_coarse_cascade{suffix}", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -337,6 +373,7 @@ ALL = {
     "level_fusion": bench_level_fusion,
     "gather_fusion": bench_gather_fusion,
     "table_streaming": bench_table_streaming,
+    "coarse_cascade": bench_coarse_cascade,
     "roofline": bench_roofline,
 }
 

@@ -142,9 +142,9 @@ def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
         shard from the host edge-balanced partitioner — per-device compute
         stays ~m/D, exactly like the per-level driver;
       * the shard is then ``all_gather``-ed ONCE into the replicated
-        ``m_total = D·m_pad`` edge list; aggregation reuses the jitted
-        ``aggregation.coarsen_graph`` on it (identical on every device, no
-        re-shuffle), and coarse levels — orders of magnitude smaller —
+        ``m_total = D·m_pad`` edge list; aggregation reuses the one-sort
+        ``aggregation.remap_and_coarsen`` on it (identical on every device,
+        no re-shuffle), and coarse levels — orders of magnitude smaller —
         sweep on the replicated list masked by a static contiguous
         dst-range ownership (``ceil(n/D)`` vertices per device, so the
         per-sweep psum merge stays a disjoint union);
@@ -190,18 +190,21 @@ def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
             return com, sweeps.astype(jnp.int32)
 
         def aggregate(cur: Graph, com, assign):
-            """remap + pmax'd convergence + coarsen (shared jitted helper)."""
-            vmask = cur.vertex_mask()
-            new_com, n_comm = aggregation.remap_communities(com, vmask)
+            """One-sort remap+coarsen + pmax'd convergence (shared helper).
+
+            ``com`` is replicated, so the fused ``remap_and_coarsen`` runs
+            identically on every device with no communication; only the
+            community count is collectively merged for the lockstep
+            predicate (its local value already equals the pmax)."""
+            new_com, n_comm, cg = aggregation.remap_and_coarsen(cur, com)
             n_comm = jax.lax.pmax(n_comm, axes)  # lockstep collective merge
             done = n_comm == cur.n_valid         # Alg. 3 l.6, on device
             macro = new_com[jnp.clip(assign, 0, n - 1)]
 
             def advance(_):
-                cg = aggregation.coarsen_graph(cur, new_com, n_comm)
                 nown = cg.edge_mask & (cg.dst >= lo) & (cg.dst < hi)
                 return (cg.src, cg.dst, cg.w, cg.edge_mask, nown,
-                        cg.n_valid, cg.m_valid, macro)
+                        n_comm, cg.m_valid, macro)
 
             def stay(_):
                 return (cur.src, cur.dst, cur.w, cur.edge_mask,
@@ -333,12 +336,12 @@ def distributed_louvain(
             )
         sweeps_per_level.append(int(sweeps))
         with timer.phase("aggregation"):
-            new_com, n_comm = aggregation.remap_communities(com, cur.vertex_mask())
+            new_com, n_comm, coarse = aggregation.remap_and_coarsen(cur, com)
             n_comm_per_level.append(int(n_comm))
             done = int(n_comm) == int(cur.n_valid)
             if not done:
                 assign = new_com[jnp.clip(assign, 0, n - 1)]
-                cur = aggregation.coarsen_graph(cur, new_com, n_comm)
+                cur = coarse
         levels = level + 1
         if done:
             break

@@ -70,6 +70,10 @@ class EngineSpec(ConfigBase):
     # per-row-block windowed streaming; "auto" resolves from the VMEM byte
     # budget (kernels.common) at trace time.
     table_mode: str = "auto"     # auto | resident | streamed
+    # ell/pallas with NO host-built layout: rebuild a single-bucket ELL tile
+    # of this static width per level inside the trace (the cascade's coarse
+    # levels, DESIGN.md §Pipeline).  0 = host-built DeviceEll required.
+    ell_width: int = 0
 
     def __post_init__(self):
         from repro.kernels.common import TABLE_MODES
@@ -80,6 +84,12 @@ class EngineSpec(ConfigBase):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.table_mode not in TABLE_MODES:
             raise ValueError(f"unknown table_mode {self.table_mode!r}")
+        if self.ell_width < 0:
+            raise ValueError(f"ell_width must be >= 0, got {self.ell_width}")
+        if self.ell_width > 0 and self.backend not in ("ell", "pallas"):
+            raise ValueError(
+                "ell_width (traced re-bucketing) requires the ell or pallas "
+                f"backend, not {self.backend!r}")
 
 
 @dataclasses.dataclass
@@ -152,30 +162,16 @@ def _grid_propose(ell, active, n: int, eval_bucket):
     return proposal_ext[:n], propose_ext[:n]
 
 
-def _merge_tail(ell, active, n: int, proposal, propose, eval_tail):
-    """Merge high-degree-tail proposals from ``eval_tail(valid_edges) ->
-    (best[n], good[n])`` over the pre-extracted tail edge list."""
-    valid_t = ((ell.tail_src < n) & (ell.tail_dst < n)
-               & active[jnp.clip(ell.tail_dst, 0, n - 1)])
-    best, good = eval_tail(valid_t)
-    tail_prop = ell.is_tail & active & good
-    return jnp.where(tail_prop, best, proposal), propose | tail_prop
-
-
-def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
-                  use_pallas: bool):
-    """Degree-bucketed fused-gather evaluator (DESIGN.md §Kernels).
+def _ell_evaluators(spec: EngineSpec, g: Graph, labels, it, seed,
+                    use_pallas: bool, table_mode: str):
+    """Per-sweep closure pair ``(eval_bucket, eval_tail)`` shared by the
+    host-built bucket evaluator and the traced coarse-level evaluator.
 
     The per-vertex tables (labels for PLP; community/volume/size/degree for
-    Louvain) are built ONCE per sweep and handed whole to the ``local_move``
-    kernel family, which performs the per-neighbor gathers in-kernel — no
-    gathered (rows, W) tiles are materialized here; ``spec.table_mode``
-    picks VMEM-resident tables vs per-row-block windowed streaming.  ``ell``
-    routes through the pure-jnp oracle, ``pallas`` through the fused kernel.
-    Tail (above-widest-bucket) vertices go through the segment evaluator on
-    pre-extracted tail edges, gathering from the SAME once-per-sweep
-    extended tables the bucket path consumes (``moves.*_tables``) — the
-    tail's per-sweep lexsort result is scored off one shared table build."""
+    Louvain) are built ONCE here per sweep; ``eval_bucket(rows, nbr, w,
+    windows)`` hands them whole to the ``local_move`` kernel family (gathers
+    in-kernel), ``eval_tail(src, dst, w, valid) -> (best[n], good[n])``
+    scores an edge list off the SAME extended tables (``moves.*_tables``)."""
     from repro.kernels.local_move import ops as lm_ops
 
     n = g.n_max
@@ -189,12 +185,12 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
             return lm_ops.local_move_plp(
                 rows, nbr, w, labels_ext, noise_seed,
                 tie_eps=spec.tie_eps, sentinel=n, use_pallas=use_pallas,
-                windows=windows, table_mode=spec.table_mode,
+                windows=windows, table_mode=table_mode,
             )
 
-        def eval_tail(valid_t):
+        def eval_tail(tail_src, tail_dst, tail_w, valid_t):
             best_score, best_lab, cur_score = moves.plp_best_labels_tables(
-                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t, labels_ext,
+                tail_src, tail_dst, tail_w, valid_t, labels_ext,
                 n, noise_it, seed, spec.tie_eps,
             )
             return best_lab, (best_lab >= 0) & (best_score > cur_score)
@@ -219,23 +215,79 @@ def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
                 rows, nbr, w, com_ext, vol_ext, size_ext, deg_ext, vol_v,
                 sentinel=n, singleton_rule=spec.singleton_rule,
                 use_pallas=use_pallas,
-                windows=windows, table_mode=spec.table_mode,
+                windows=windows, table_mode=table_mode,
                 composed=composed,
             )
 
-        def eval_tail(valid_t):
+        def eval_tail(tail_src, tail_dst, tail_w, valid_t):
             best_gain, best_cand = moves.louvain_best_moves_tables(
-                ell.tail_src, ell.tail_dst, ell.tail_w, valid_t,
+                tail_src, tail_dst, tail_w, valid_t,
                 com_ext, vol_ext, size_ext, deg_ext, vol_v, n,
                 singleton_rule=spec.singleton_rule,
             )
             return best_cand, vmask & (best_cand >= 0) & (best_gain > 0.0)
 
+    return eval_bucket, eval_tail
+
+
+def _evaluate_ell(spec: EngineSpec, g: Graph, ell, labels, active, it, seed,
+                  use_pallas: bool):
+    """Degree-bucketed fused-gather evaluator (DESIGN.md §Kernels) over a
+    host-built ``DeviceEll``; ``spec.table_mode`` picks VMEM-resident tables
+    vs per-row-block windowed streaming.  ``ell`` routes through the
+    pure-jnp oracle, ``pallas`` through the fused kernel.  Tail
+    (above-widest-bucket) vertices go through the tables tail evaluator on
+    the pre-extracted tail edges — the tail's per-sweep lexsort result is
+    scored off the one shared per-sweep table build."""
+    n = g.n_max
+    eval_bucket, eval_tail = _ell_evaluators(
+        spec, g, labels, it, seed, use_pallas, spec.table_mode)
     proposal, propose = _grid_propose(ell, active, n, eval_bucket)
     if ell.has_tail:
-        proposal, propose = _merge_tail(
-            ell, active, n, proposal, propose, eval_tail)
+        valid_t = ((ell.tail_src < n) & (ell.tail_dst < n)
+                   & active[jnp.clip(ell.tail_dst, 0, n - 1)])
+        best, good = eval_tail(ell.tail_src, ell.tail_dst, ell.tail_w,
+                               valid_t)
+        tail_prop = ell.is_tail & active & good
+        proposal = jnp.where(tail_prop, best, proposal)
+        propose = propose | tail_prop
     return proposal, propose
+
+
+def _evaluate_ell_traced(spec: EngineSpec, g: Graph, tile, labels, active,
+                         it, seed):
+    """Coarse-level fused-kernel evaluator with NO host-built layout
+    (DESIGN.md §Pipeline): the ELL tile is re-bucketed from the src-sorted
+    coarse edge list inside the trace (``graph/ell.traced_ell_tile``,
+    hoisted to ``make_step`` so one level's sweeps share a single build) at
+    the static per-stage width ``spec.ell_width``, then scored through the
+    SAME ``local_move`` kernel family as level 0 (``ell`` = jnp oracle,
+    ``pallas`` = fused kernel).  Rows are vertex-aligned, so the bucket
+    scatter of ``_grid_propose`` reduces to a ``where``.  Vertices wider
+    than the tile fall back to the tables tail evaluator over the FULL edge
+    list, gated by ``lax.cond`` so hub-free levels skip the per-sweep sort
+    entirely.  Tables are forced resident: coarse tables are small by
+    construction and streaming needs host-side window metadata."""
+    n = g.n_max
+    rows, nbr, w_t, is_tail = tile
+    eval_bucket, eval_tail = _ell_evaluators(
+        spec, g, labels, it, seed, use_pallas=(spec.backend == "pallas"),
+        table_mode="resident")
+    best, good = eval_bucket(rows, nbr, w_t, None)
+    row_prop = (rows < n) & active & good
+    proposal = jnp.where(row_prop, best, -1)
+    propose = row_prop
+
+    def with_tail(args):
+        proposal, propose = args
+        dstc = jnp.clip(g.dst, 0, n - 1)
+        valid_t = g.edge_mask & is_tail[dstc] & active[dstc]
+        best_t, good_t = eval_tail(g.src, g.dst, g.w, valid_t)
+        tail_prop = is_tail & active & good_t
+        return jnp.where(tail_prop, best_t, proposal), propose | tail_prop
+
+    return jax.lax.cond(jnp.any(is_tail), with_tail, lambda args: args,
+                        (proposal, propose))
 
 
 # ----------------------------------------------------------------- step / loop
@@ -245,11 +297,21 @@ def make_step(spec: EngineSpec, g: Graph, ell, restrict):
     """Build the shared sweep step: evaluate → gate → adopt → frontier."""
     n = g.n_max
     mult, salt = _GATE_CONST[spec.evaluator]
+    tile = None
+    if spec.backend != "segment" and ell is None and spec.ell_width > 0:
+        from repro.graph.ell import traced_ell_tile
+
+        # loop-invariant within a level: built once per phase, shared by
+        # every sweep of the fused while_loop
+        tile = traced_ell_tile(g, spec.ell_width)
 
     def step(labels, active, it, seed):
         if spec.backend == "segment":
             proposal, propose = _evaluate_segment(
                 spec, g, labels, active, it, seed, restrict)
+        elif tile is not None:
+            proposal, propose = _evaluate_ell_traced(
+                spec, g, tile, labels, active, it, seed)
         else:
             proposal, propose = _evaluate_ell(
                 spec, g, ell, labels, active, it, seed,
@@ -353,7 +415,7 @@ class SweepEngine:
         self.g = g
         self.spec = spec
         self.ell = None
-        if spec.backend in ("ell", "pallas"):
+        if spec.backend in ("ell", "pallas") and spec.ell_width == 0:
             from repro.graph import ell as ell_mod
 
             if ell is None:

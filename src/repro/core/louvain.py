@@ -25,16 +25,25 @@ community-count histories are written into fixed-size on-device buffers
 ``pipeline_fused=False`` keeps the per-level Python driver (one fused
 local-moving dispatch per level, aggregation and convergence check on host)
 with a bit-for-bit parity contract against the fused pipeline, enforced by
-``tests/test_pipeline.py``.  The ``ell``/``pallas`` backends apply to the
-finest (level-0) graph only; coarse levels use the ``segment`` evaluator in
-BOTH drivers — see DESIGN.md §Pipeline for the rule.
+``tests/test_pipeline.py``.
+
+``capacity_schedule`` adds the coarse-level CASCADE (DESIGN.md §Pipeline):
+once the carried coarse graph fits a smaller static capacity from a bounded
+schedule, the fused loop exits, the graph is compacted on device
+(``aggregation.shrink_graph``) and the level loop resumes under a program
+compiled at the smaller capacity — so deep-hierarchy aggregation sorts and
+sweeps stop paying level-0 cost.  Inside a cascade the ``ell``/``pallas``
+backends also apply to COARSE levels, through the traced per-stage ELL
+re-bucketing (``graph/ell.traced_ell_tile``); ``capacity_schedule="none"``
+pins today's single-capacity program — the bit-for-bit parity oracle, with
+the segment evaluator on coarse levels, matched by the per-level driver.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 from functools import lru_cache
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +54,70 @@ from repro.core import aggregation
 from repro.core.engine import EngineSpec, SweepEngine, device_phase
 from repro.core.modularity import modularity
 from repro.graph.structure import Graph
+from repro.kernels.common import pick_ell_width
 from repro.utils.timing import Timer
+
+
+# ------------------------------------------------------------ capacity schedule
+
+
+def auto_capacity_schedule(
+    n_max: int,
+    m_max: int,
+    *,
+    max_stages: int = 4,
+    shrink: int = 4,
+    n_floor: int = 256,
+    m_floor: int = 2048,
+    min_n: int = 4096,
+) -> Tuple[Tuple[int, int], ...]:
+    """Bounded static capacity schedule for the coarse-level cascade.
+
+    Quarter steps from the full capacity down to the floors, at most
+    ``max_stages`` entries — so at most that many distinct compiled stage
+    programs per run regardless of graph size or hierarchy depth (DESIGN.md
+    §Pipeline).  Graphs below ``min_n`` vertices stay single-capacity: at
+    that scale every level is dispatch-bound and extra compiles cost more
+    than the shrink saves.
+    """
+    caps = [(int(n_max), int(m_max))]
+    if n_max < min_n:
+        return tuple(caps)
+    while len(caps) < max_stages:
+        # floors are clamped to the previous capacity: a graph whose own
+        # capacity sits below a floor (e.g. a capacity-padded sparse graph
+        # with m_max < m_floor) must never be scheduled to GROW
+        nc = min(caps[-1][0], max(n_floor, -(-caps[-1][0] // shrink)))
+        mc = min(caps[-1][1], max(m_floor, -(-caps[-1][1] // shrink)))
+        if (nc, mc) == caps[-1]:
+            break
+        caps.append((nc, mc))
+    return tuple(caps)
+
+
+def _validate_schedule(sched) -> None:
+    if isinstance(sched, str) and sched in ("auto", "none"):
+        return
+    ok = isinstance(sched, tuple) and len(sched) > 0
+    if ok:
+        for c in sched:
+            if not (isinstance(c, tuple) and len(c) == 2 and all(
+                    isinstance(x, int) and not isinstance(x, bool) and x > 0
+                    for x in c)):
+                ok = False
+                break
+    if ok:
+        for a, b in zip(sched, sched[1:]):
+            if not (b[0] <= a[0] and b[1] <= a[1] and b != a):
+                ok = False
+                break
+    if not ok:
+        raise ValueError(
+            "capacity_schedule must be 'auto' (bounded schedule derived from "
+            "the graph capacities), 'none' (single-capacity pipeline, the "
+            "parity oracle), or an explicit tuple of descending "
+            "(n_cap, m_cap) positive-int pairs such as "
+            f"((8192, 131072), (2048, 32768)); got {sched!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +139,13 @@ class LouvainConfig(ConfigBase):
     # lax.while_loop, so louvain()/leiden() is one dispatch + one readback.
     # Requires fused sweeps; with fused=False the per-level driver runs.
     pipeline_fused: bool = True
+    # Coarse-level cascade (DESIGN.md §Pipeline): once the carried coarse
+    # graph fits a smaller static capacity from the schedule, the fused loop
+    # descends to a program compiled at that capacity.  "auto" derives a
+    # bounded (≤4-program) schedule from (n_max, m_max); "none" pins the
+    # single-capacity pipeline (the bit-for-bit parity oracle); an explicit
+    # tuple of descending (n_cap, m_cap) pairs is used as given.
+    capacity_schedule: "str | Tuple[Tuple[int, int], ...]" = "auto"
     # Leiden-style refinement (beyond paper; the paper cites Leiden [30] as
     # the natural next algorithm): refine each community into well-connected
     # sub-communities before aggregation, then seed the next level with the
@@ -88,6 +167,7 @@ class LouvainConfig(ConfigBase):
         if self.refine_sweeps < 1:
             raise ValueError(
                 f"refine_sweeps must be >= 1, got {self.refine_sweeps}")
+        _validate_schedule(self.capacity_schedule)
 
 
 @dataclasses.dataclass
@@ -101,6 +181,9 @@ class LouvainResult:
     timer: Timer
     n_comm_per_level: list = dataclasses.field(default_factory=list)
     delta_n_per_level: list = dataclasses.field(default_factory=list)
+    # (n_cap, m_cap) of each cascade stage actually entered, in order; a
+    # single entry means the schedule degenerated to one program
+    cascade_stages: list = dataclasses.field(default_factory=list)
 
 
 def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
@@ -118,10 +201,43 @@ def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
 
 
 def _coarse_backend(backend: str) -> str:
-    """DESIGN.md §Pipeline: the ELL layout is built host-side for the finest
-    graph only; every coarse level runs the segment evaluator (in both the
-    fused pipeline and the per-level driver, so they stay bit-identical)."""
+    """DESIGN.md §Pipeline: the host-built ELL layout covers the finest
+    graph only; OUTSIDE a cascade every coarse level runs the segment
+    evaluator (in both the single-capacity pipeline and the per-level
+    driver, so they stay bit-identical).  Cascade stages instead re-bucket
+    on the fly — see ``_cascade_coarse_spec``."""
     return "segment" if backend in ("ell", "pallas") else backend
+
+
+def _resolve_schedule(cfg: LouvainConfig, g: Graph) -> Tuple[Tuple[int, int], ...]:
+    """Concrete capacity schedule for this graph: full capacity first, then
+    the validated descending entries that actually fit under it."""
+    sched = cfg.capacity_schedule
+    full = (g.n_max, g.m_max)
+    if sched == "none":
+        return (full,)
+    if sched == "auto":
+        return auto_capacity_schedule(g.n_max, g.m_max)
+    caps = [full]
+    for c in sched:
+        c = (int(c[0]), int(c[1]))
+        if (c[0] <= full[0] and c[1] <= full[1]
+                and (c[0] < caps[-1][0] or c[1] < caps[-1][1])):
+            caps.append(c)
+    return tuple(caps)
+
+
+def _cascade_coarse_spec(cfg: LouvainConfig, cascade: bool,
+                         width: int) -> EngineSpec:
+    """Coarse-level engine spec for one stage.
+
+    Inside a cascade the ``ell``/``pallas`` backends keep their fused
+    local_move kernels on coarse levels via the traced re-bucketing at the
+    stage's static ``width``; outside (the parity oracle) the historical
+    segment fallback applies."""
+    if cascade and cfg.backend in ("ell", "pallas"):
+        return engine_spec(cfg).replace(ell_width=width)
+    return engine_spec(cfg, backend=_coarse_backend(cfg.backend))
 
 
 def _refine_spec(cfg: LouvainConfig) -> EngineSpec:
@@ -129,20 +245,34 @@ def _refine_spec(cfg: LouvainConfig) -> EngineSpec:
                        max_sweeps=cfg.refine_sweeps).replace(threshold=0)
 
 
-# ------------------------------------------------------------ transfer hook
+# ------------------------------------------------------------ transfer hooks
 
 _transfer_count = 0   # incremented on every pipeline readback (test hook)
+_stage_sync_count = 0  # incremented on every cascade stage-boundary sync
 
 
 def _readback(tree):
-    """The ONE device→host transfer of the fused pipeline.
+    """The ONE bulk device→host transfer of the fused pipeline.
 
-    Every host materialization in the ``pipeline_fused`` path flows through
-    this function, so tests can count transfers by monkeypatching it (or by
-    reading ``_transfer_count``)."""
+    Every host materialization of results in the ``pipeline_fused`` path
+    flows through this function, so tests can count transfers by
+    monkeypatching it (or by reading ``_transfer_count``)."""
     global _transfer_count
     _transfer_count += 1
     return jax.device_get(tree)
+
+
+def _stage_sync(tree):
+    """The tiny per-stage-boundary host sync of the cascade: five scalars —
+    (done, level, n_valid, m_valid, max_deg) — deciding whether to finalize
+    or where to descend, and the next stage's traced-ELL width.  Counted
+    separately from the one bulk ``_readback`` so tests can assert the
+    cascade's transfer accounting; a degenerate (single-capacity) schedule
+    never syncs."""
+    global _stage_sync_count
+    _stage_sync_count += 1
+    done, level, nv, mv, max_deg = jax.device_get(tree)
+    return bool(done), int(level), int(nv), int(mv), int(max_deg)
 
 
 # ------------------------------------------------------------ fused pipeline
@@ -153,25 +283,38 @@ def _graph_arrays(g: Graph):
 
 
 @lru_cache(maxsize=None)
-def _pipeline_fn(spec0: EngineSpec, spec_coarse: EngineSpec,
-                 refine_spec: Optional[EngineSpec], max_levels: int,
-                 track_modularity: bool):
-    """Build the jitted whole-run pipeline (DESIGN.md §Pipeline).
+def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
+              refine_spec: Optional[EngineSpec], max_levels: int,
+              track_modularity: bool, next_caps: Optional[Tuple[int, int]]):
+    """Build one jitted cascade stage (DESIGN.md §Pipeline).
 
-    Level 0 is peeled out of the loop (it may use the ELL backend and always
-    starts from singletons); levels >= 1 run inside a ``lax.while_loop`` with
-    the Alg. 3 ``n_comm == n_valid`` predicate on device.  Histories are
-    fixed-size on-device buffers: ``modularity[max_levels]`` (NaN sentinel),
-    ``sweeps/n_comm[max_levels]`` and ``delta_n[max_levels, max_sweeps]``
-    (``-1`` sentinel, the PR-1 convention).
+    ``spec0 is not None`` marks stage 0: level 0 is peeled out of the loop
+    (it may use the host-built ELL backend and always starts from
+    singletons); with ``next_caps=None`` as well, this is exactly the
+    single-capacity whole-run pipeline — the parity oracle.  Later stages
+    resume the level loop from carried state at their own (smaller) static
+    capacity.  Levels run inside a ``lax.while_loop`` with the Alg. 3
+    ``n_comm == n_valid`` predicate on device; ``next_caps`` adds the
+    cascade descent predicate — the loop hands control back to the host
+    scheduler (one 5-scalar ``_stage_sync``) as soon as the carried coarse
+    graph fits the next capacity.
+
+    Histories are fixed-size on-device buffers threaded THROUGH stages and
+    written at absolute level indices — ``modularity[max_levels]`` (NaN
+    sentinel), ``sweeps/n_comm[max_levels]`` and
+    ``delta_n[max_levels, max_sweeps]`` (``-1`` sentinel, the PR-1
+    convention) — so the one bulk readback at the end reconstructs
+    ``LouvainResult`` unchanged regardless of how many stages ran.
     """
 
-    def pipeline(g: Graph, ell, g0: Graph, seed):
+    def stage(g: Graph, ell, g0: Graph, seed, assign, init_com, macro_in,
+              level_in, hists):
         n = g.n_max
         arange_n = jnp.arange(n, dtype=jnp.int32)
 
         def run_level(cur: Graph, assign, init_com, level_u32, spec, ell):
-            """One level: fused local-moving → remap → (refine) → coarsen.
+            """One level: fused local-moving → one-sort remap+coarsen →
+            (refine).
 
             Mirrors one iteration of the per-level driver exactly; returns
             the next level's graph arrays + bookkeeping and this level's
@@ -180,7 +323,14 @@ def _pipeline_fn(spec0: EngineSpec, spec_coarse: EngineSpec,
             it0 = level_u32 * jnp.uint32(1000)
             com, _, sweeps, dn_h, _act_h = device_phase(
                 spec, cur, ell, init_com, vmask, it0, seed)
-            new_com, n_comm = aggregation.remap_communities(com, vmask)
+            if refine_spec is None:
+                # ONE lax.sort per aggregation: the remap is fused into the
+                # coarsening GroupBy (DESIGN.md §Pipeline one-sort invariant)
+                new_com, n_comm, nxt = aggregation.remap_and_coarsen(cur, com)
+            else:
+                # Leiden aggregates by the REFINED partition below; only the
+                # macro remap is needed here
+                new_com, n_comm = aggregation.remap_communities(com, vmask)
             macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
             done = n_comm == cur.n_valid           # Alg. 3 l.6 convergence
             q = (modularity(g0, macro_assign) if track_modularity
@@ -194,15 +344,19 @@ def _pipeline_fn(spec0: EngineSpec, spec_coarse: EngineSpec,
                     ref, _, _, _, _ = device_phase(
                         refine_spec, cur, None, arange_n, vmask,
                         it0 + jnp.uint32(500), seed, restrict=com)
-                    new_ref, n_ref = aggregation.remap_communities(ref, vmask)
+                    new_ref, n_ref, nxt_r = aggregation.remap_and_coarsen(
+                        cur, ref)
+                    # macro seed as the CONTIGUIZED macro id (all members of
+                    # a refined group share it): values < n_comm stay valid
+                    # under any later stage capacity, and the relabeling is
+                    # monotone in the raw id, so every order-based tie-break
+                    # downstream is unchanged
                     macro_of_ref = jax.ops.segment_max(
-                        jnp.where(vmask, com, -1),
+                        jnp.where(vmask, new_com, -1),
                         jnp.clip(new_ref, 0, n - 1), num_segments=n)
-                    nxt = aggregation.coarsen_graph(cur, new_ref, n_ref)
-                    return (_graph_arrays(nxt),
+                    return (_graph_arrays(nxt_r),
                             new_ref[jnp.clip(assign, 0, n - 1)],
                             jnp.clip(macro_of_ref, 0, n - 1).astype(jnp.int32))
-                nxt = aggregation.coarsen_graph(cur, new_com, n_comm)
                 return _graph_arrays(nxt), macro_assign, arange_n
 
             def stay(_):
@@ -213,31 +367,43 @@ def _pipeline_fn(spec0: EngineSpec, spec_coarse: EngineSpec,
             return (nxt_arrays, assign2, init2, macro_assign,
                     sweeps.astype(jnp.int32), dn_h, n_comm, q, done)
 
-        # fixed-size per-level history buffers, one readback at the end
-        mod_hist = jnp.full((max_levels,), jnp.nan, jnp.float32)
-        sweeps_hist = jnp.full((max_levels,), -1, jnp.int32)
-        ncomm_hist = jnp.full((max_levels,), -1, jnp.int32)
-        dn_hist = jnp.full((max_levels, spec_coarse.max_sweeps), -1, jnp.int32)
+        mod_hist, sweeps_hist, ncomm_hist, dn_hist = hists
 
-        # peeled level 0: the only level that may use the ELL/Pallas backend
-        (arrays, assign, init_com, macro, sweeps, dn_h, n_comm, q,
-         done) = run_level(g, arange_n, arange_n, jnp.uint32(0), spec0, ell)
-        mod_hist = mod_hist.at[0].set(q)
-        sweeps_hist = sweeps_hist.at[0].set(sweeps)
-        ncomm_hist = ncomm_hist.at[0].set(n_comm)
-        dn_hist = dn_hist.at[0].set(dn_h)
+        if spec0 is not None:
+            # peeled level 0: the only level that may use the host-built ELL
+            (arrays, assign, init_com, macro, sweeps, dn_h, n_comm, q,
+             done) = run_level(g, assign, init_com, jnp.uint32(0), spec0, ell)
+            mod_hist = mod_hist.at[0].set(q)
+            sweeps_hist = sweeps_hist.at[0].set(sweeps)
+            ncomm_hist = ncomm_hist.at[0].set(n_comm)
+            dn_hist = dn_hist.at[0].set(dn_h)
+            level = jnp.int32(1)
+        else:
+            arrays = _graph_arrays(g)
+            macro = macro_in
+            done = jnp.bool_(False)
+            level = level_in
 
         def cond(c):
-            level, done = c[0], c[1]
-            return (level < max_levels) & (~done)
+            level, done, arrays = c[0], c[1], c[2]
+            keep = (level < max_levels) & (~done)
+            if next_caps is not None:
+                # cascade descent: exit once the carried graph fits the
+                # next (smaller) static capacity
+                fits = ((arrays[4] <= next_caps[0])
+                        & (arrays[5] <= next_caps[1]))
+                keep = keep & (~fits)
+            return keep
 
         def body(c):
             (level, _done, arrays, assign, init_com, _macro,
              mh, sh, nh, dh) = c
             src, dst, w, em, nv, mv = arrays
+            # coarsening output is src-sorted and front-compacted — the
+            # invariant the traced ELL re-bucketing relies on
             cur = Graph(src=src, dst=dst, w=w, edge_mask=em, n_valid=nv,
-                        m_valid=mv, n_max=g.n_max, m_max=g.m_max,
-                        sorted_by=None)
+                        m_valid=mv, n_max=n, m_max=g.m_max,
+                        sorted_by="src")
             (arrays2, assign2, init2, macro2, sweeps, dn_h, n_comm, q,
              done2) = run_level(cur, assign, init_com,
                                 level.astype(jnp.uint32), spec_coarse, None)
@@ -248,28 +414,74 @@ def _pipeline_fn(spec0: EngineSpec, spec_coarse: EngineSpec,
             return (level + 1, done2, arrays2, assign2, init2, macro2,
                     mh, sh, nh, dh)
 
-        carry = (jnp.int32(1), done, arrays, assign, init_com, macro,
+        carry = (level, done, arrays, assign, init_com, macro,
                  mod_hist, sweeps_hist, ncomm_hist, dn_hist)
         carry = jax.lax.while_loop(cond, body, carry)
-        (levels, _, _, _, _, macro, mod_hist, sweeps_hist, ncomm_hist,
-         dn_hist) = carry
+        (level, done, arrays, assign, init_com, macro,
+         mod_hist, sweeps_hist, ncomm_hist, dn_hist) = carry
 
-        final_assign, n_final = aggregation.remap_communities(
-            macro, g0.vertex_mask())
-        q_final = modularity(g0, final_assign)
-        return (final_assign, n_final, levels, q_final,
-                mod_hist, sweeps_hist, ncomm_hist, dn_hist)
+        # stage-boundary stats for the host scheduler: live counts plus the
+        # carried graph's max unweighted degree (next stage's width pick) —
+        # only a stage that CAN descend pays for the degree reduction
+        src, _dst, _w, em, nv, mv = arrays
+        if next_caps is None:
+            max_deg = jnp.int32(0)
+        else:
+            deg_cnt = jax.ops.segment_sum(
+                jnp.where(em, 1, 0), jnp.clip(src, 0, n - 1), num_segments=n)
+            max_deg = jnp.max(jnp.where(arange_n < nv, deg_cnt, 0))
 
-    return jax.jit(pipeline)
+        def finalize(_):
+            final_assign, n_final = aggregation.remap_communities(
+                macro, g0.vertex_mask())
+            return final_assign, n_final, modularity(g0, final_assign)
+
+        if next_caps is None:
+            final_assign, n_final, q_final = finalize(None)
+        else:
+            # intermediate stages skip the full-capacity final remap +
+            # modularity pass: the host only reads these outputs when the
+            # run terminates in THIS stage (done or level budget exhausted)
+            final_assign, n_final, q_final = jax.lax.cond(
+                done | (level >= max_levels), finalize,
+                lambda _: (jnp.zeros((g0.n_max,), jnp.int32), jnp.int32(0),
+                           jnp.float32(0.0)),
+                None)
+        return (arrays, assign, init_com, macro,
+                (mod_hist, sweeps_hist, ncomm_hist, dn_hist),
+                level, done, nv, mv, max_deg,
+                final_assign, n_final, q_final)
+
+    return jax.jit(stage)
+
+
+@lru_cache(maxsize=None)
+def _shrink_fn(n_in: int, m_in: int, n_out: int, m_out: int):
+    """Jitted stage-boundary compaction: slice the front-compacted carried
+    graph (and the Leiden macro seed) into the next static capacity —
+    ``aggregation.shrink_graph``, entirely on device."""
+
+    def f(arrays, init_com):
+        src, dst, w, em, nv, mv = arrays
+        gin = Graph(src=src, dst=dst, w=w, edge_mask=em, n_valid=nv,
+                    m_valid=mv, n_max=n_in, m_max=m_in, sorted_by="src")
+        return aggregation.shrink_graph(gin, n_out, m_out), init_com[:n_out]
+
+    return jax.jit(f)
 
 
 def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
                       g_original: Optional[Graph]) -> LouvainResult:
-    """Whole-run fused driver: ONE dispatch, ONE readback (``_readback``)."""
+    """Whole-run fused driver: a cascade of at most ``len(schedule)`` stage
+    dispatches with ONE bulk readback (``_readback``) at the end and one
+    5-scalar ``_stage_sync`` per stage boundary.  A degenerate schedule
+    (``"none"``, or ``"auto"`` on a small graph) is exactly the historical
+    single-dispatch single-readback pipeline."""
     timer = Timer()
     g0 = g_original if g_original is not None else g
+    caps = _resolve_schedule(cfg, g)
+    cascade = len(caps) > 1
     spec0 = engine_spec(cfg)
-    spec_coarse = engine_spec(cfg, backend=_coarse_backend(cfg.backend))
     refine_spec = _refine_spec(cfg) if cfg.refine else None
 
     ell = None
@@ -279,12 +491,59 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
         with timer.phase("ell_build"):
             ell = ell_mod.build_device_ell(g)
 
-    fn = _pipeline_fn(spec0, spec_coarse, refine_spec, cfg.max_levels,
-                      cfg.track_modularity)
+    n0 = g.n_max
+    arange0 = jnp.arange(n0, dtype=jnp.int32)
+    hists = (jnp.full((cfg.max_levels,), jnp.nan, jnp.float32),
+             jnp.full((cfg.max_levels,), -1, jnp.int32),
+             jnp.full((cfg.max_levels,), -1, jnp.int32),
+             jnp.full((cfg.max_levels, cfg.max_sweeps), -1, jnp.int32))
+    seed_a = jnp.uint32(cfg.seed)
+    stages: list = []
+
     with timer.phase("pipeline"):
-        out = fn(g, ell, g0, jnp.uint32(cfg.seed))
-        (final_assign, n_final, levels, q, mod_hist, sweeps_hist,
-         ncomm_hist, dn_hist) = _readback(out)
+        k = 0
+        width = pick_ell_width(None, *caps[0])
+        g_k, ell_k = g, ell
+        assign, init_com, macro = arange0, arange0, arange0
+        level = jnp.int32(0)
+        while True:
+            fn = _stage_fn(spec0 if k == 0 else None,
+                           _cascade_coarse_spec(cfg, cascade, width),
+                           refine_spec, cfg.max_levels, cfg.track_modularity,
+                           caps[k + 1] if k + 1 < len(caps) else None)
+            (arrays, assign, init_com, macro, hists, level, done, nv, mv,
+             max_deg, final_assign, n_final, q_final) = fn(
+                g_k, ell_k, g0, seed_a, assign, init_com, macro, level,
+                hists)
+            stages.append(caps[k])
+            if k + 1 >= len(caps):
+                break
+            done_h, level_h, nv_h, mv_h, max_deg_h = _stage_sync(
+                (done, level, nv, mv, max_deg))
+            if done_h or level_h >= cfg.max_levels:
+                break
+            # descend to the SMALLEST capacity the carried graph fits, so a
+            # fast-collapsing hierarchy skips intermediate programs
+            k2 = k
+            for j in range(k + 1, len(caps)):
+                if nv_h <= caps[j][0] and mv_h <= caps[j][1]:
+                    k2 = j
+            if k2 == k:
+                # unreachable by the loop-exit predicate (it only exits on
+                # done / budget / fits-next); a silent break here would
+                # return the intermediate stage's skipped final outputs
+                raise RuntimeError(
+                    "cascade invariant violated: stage exited without "
+                    f"done/budget and ({nv_h}, {mv_h}) fits no capacity in "
+                    f"{caps[k + 1:]}")
+            g_k, init_com = _shrink_fn(*caps[k], *caps[k2])(arrays, init_com)
+            ell_k = None
+            k = k2
+            width = pick_ell_width(max_deg_h, *caps[k])
+
+        out = _readback((final_assign, n_final, level, q_final) + hists)
+    (final_assign, n_final, levels, q, mod_hist, sweeps_hist, ncomm_hist,
+     dn_hist) = out
 
     levels = int(levels)
     sweeps_per_level = [int(s) for s in sweeps_hist[:levels]]
@@ -302,6 +561,7 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
         delta_n_per_level=[
             [int(x) for x in row[:s]]
             for row, s in zip(dn_hist[:levels], sweeps_per_level)],
+        cascade_stages=stages,
     )
 
 
@@ -354,7 +614,7 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
     local-moving dispatch per level, aggregation + Alg. 3 convergence on
     host.  Bit-for-bit parity with the fused pipeline is contractual
     (tests/test_pipeline.py) — any change here must be mirrored in
-    ``_pipeline_fn`` and vice versa."""
+    ``_stage_fn`` and vice versa."""
     timer = Timer()
     g0 = g_original if g_original is not None else g
     n = g.n_max
@@ -390,7 +650,14 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
         delta_n_per_level.append(res.delta_n_history)
 
         with _tphase(timer, "aggregation", level, cfg.per_level_timing):
-            new_com, n_comm = aggregation.remap_communities(com, cur.vertex_mask())
+            # one-sort coarsening (the fused-pipeline default; bit-identical
+            # to the two-step remap_communities + coarsen_graph reference)
+            if cfg.refine:
+                new_com, n_comm = aggregation.remap_communities(
+                    com, cur.vertex_mask())
+            else:
+                new_com, n_comm, coarse = aggregation.remap_and_coarsen(
+                    cur, com)
             # macro labels on ORIGINAL vertices (the result partition); under
             # refinement `assign` tracks the finer refined chain instead
             macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
@@ -403,18 +670,19 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
                 # level's local-moving with each super-vertex's macro id
                 with _tphase(timer, "refinement", level, cfg.per_level_timing):
                     ref = _refine_partition(cur, com, cfg, level)
-                new_ref, n_ref = aggregation.remap_communities(
-                    ref, cur.vertex_mask())
-                # macro label of each refined group (refined ⊆ macro)
+                new_ref, n_ref, coarse = aggregation.remap_and_coarsen(
+                    cur, ref)
+                # contiguized macro label of each refined group (refined ⊆
+                # macro; monotone relabeling — see _stage_fn.run_level)
                 macro_of_ref = jax.ops.segment_max(
-                    jnp.where(cur.vertex_mask(), com, -1),
+                    jnp.where(cur.vertex_mask(), new_com, -1),
                     jnp.clip(new_ref, 0, n - 1), num_segments=n)
                 assign = new_ref[jnp.clip(assign, 0, n - 1)]
-                cur = aggregation.coarsen_graph(cur, new_ref, n_ref)
+                cur = coarse
                 init_com = jnp.clip(macro_of_ref, 0, n - 1).astype(jnp.int32)
             elif not done:
                 assign = new_com[jnp.clip(assign, 0, n - 1)]
-                cur = aggregation.coarsen_graph(cur, new_com, n_comm)
+                cur = coarse
         levels = level + 1
         if cfg.track_modularity:
             mod_hist.append(float(modularity(g0, macro_assign)))

@@ -7,12 +7,13 @@ BlockSpecs.  Vertices with deg > max(W) fall back to the sort+segment path
 (the "tail"), mirroring how high-degree hubs get special-cased in parallel
 community detection codes.
 
-The bucketing itself is a HOST-side build: row capacities are data-dependent
-(a jit-native rebuild would need n_max-row buckets per width), so the fused
-multi-level pipeline applies the ELL/Pallas evaluators to the finest
-(level-0) graph only and runs coarse levels through the segment evaluator —
-the documented fallback rule of DESIGN.md §Pipeline, mirrored by the
-per-level driver so both stay bit-identical.
+The full multi-width bucketing is a HOST-side build: row capacities are
+data-dependent (a jit-native rebuild would need n_max-row buckets per
+width), so it applies to the finest (level-0) graph only.  Coarse levels
+inside the capacity-scheduled cascade use ``traced_ell_tile`` instead — a
+jit-traceable single-bucket rebuild at a STATIC per-stage width over the
+src-sorted coarse edge list, with above-width vertices flagged for the
+edge-list tail fallback (DESIGN.md §Pipeline).
 """
 from __future__ import annotations
 
@@ -134,6 +135,47 @@ def build_ell(
         loop_w=loop_w,
         deg_w=deg_w.astype(np.float32),
     )
+
+
+# ------------------------------------------------------------ traced rebucketing
+
+
+def traced_ell_tile(
+    g: Graph, width: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Jit-traceable single-bucket ELL view of a src-sorted coarse graph.
+
+    The ``build_ell`` equivalent for graphs built INSIDE a compiled program
+    (the cascade's coarse levels, DESIGN.md §Pipeline): one (n_max, width)
+    neighbor tile with row v holding vertex v's non-loop out-edges — by the
+    directed-symmetric convention these equal the in-neighborhoods
+    ``build_ell`` buckets — rebuilt per level from CSR row pointers in O(n·W)
+    gathers, no data-dependent shapes.  Vertices whose degree exceeds the
+    static ``width`` are flagged ``is_tail`` and their row is masked to pure
+    padding; the engine evaluates them through the tables tail evaluator
+    over the full edge list (gated out when no tail exists at runtime).
+
+    Returns ``(rows[n], nbr[n, W], w[n, W], is_tail[n])`` with the same
+    sentinel conventions as ``EllBucket`` (row id / neighbor id ``n_max``
+    and weight 0 mark padding).
+    """
+    n, m = g.n_max, g.m_max
+    if g.sorted_by != "src":
+        raise ValueError("traced_ell_tile requires a src-sorted graph")
+    rp = g.row_ptr()
+    deg = rp[1:] - rp[:-1]
+    vmask = g.vertex_mask()
+    is_tail = vmask & (deg > width)
+    arange_n = jnp.arange(n, dtype=jnp.int32)
+    rows = jnp.where(vmask & ~is_tail, arange_n, n)
+    j = jnp.arange(width, dtype=jnp.int32)
+    idx = jnp.clip(rp[:-1, None] + j[None, :], 0, max(m - 1, 0))
+    take = (j[None, :] < deg[:, None]) & (rows < n)[:, None]
+    nbr = jnp.where(take, g.dst[idx], n)
+    wt = jnp.where(take, g.w[idx], 0.0)
+    # self-loops are never move candidates (Graph convention): mask to sink
+    loop = nbr == arange_n[:, None]
+    return rows, jnp.where(loop, n, nbr), jnp.where(loop, 0.0, wt), is_tail
 
 
 # ------------------------------------------------------------ device layout

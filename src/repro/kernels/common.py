@@ -78,6 +78,32 @@ def pick_row_block_fused(width: int, budget_bytes: int | None = None,
     return pick_row_block(width, max(1, avail // 4), max_rows=2048)
 
 
+# Static width menu for the cascade's traced coarse-level re-bucketing
+# (DESIGN.md §Pipeline).  A small menu keeps the number of distinct compiled
+# stage programs bounded: each cascade stage picks ONE width from it.
+STAGE_WIDTH_MENU = (16, 64, 256)
+
+
+def pick_ell_width(max_deg: int | None, n_cap: int, m_cap: int) -> int:
+    """Static ELL width for one cascade stage's traced re-bucketing.
+
+    ``max_deg`` is the carried coarse graph's max unweighted degree, read at
+    the stage boundary sync; the pick is the smallest menu width covering it
+    (no tail pass at stage entry).  Hubs appearing at DEEPER levels inside
+    the stage — or exceeding the widest menu entry — fall back to the
+    engine's cond-gated edge-list tail, so the width only affects
+    performance, never results.  ``max_deg=None`` (stage 0's coarse loop,
+    before any boundary sync has run) uses a 4×-average-degree heuristic
+    derived from the static stage capacities.
+    """
+    if max_deg is None:
+        max_deg = max(STAGE_WIDTH_MENU[0], (4 * m_cap) // max(1, n_cap))
+    for width in STAGE_WIDTH_MENU:
+        if max_deg <= width:
+            return width
+    return STAGE_WIDTH_MENU[-1]
+
+
 def resolve_table_mode(mode: str, table_bytes: int,
                        budget_bytes: int | None = None) -> str:
     """Resident-vs-streamed policy for the local_move per-vertex tables.

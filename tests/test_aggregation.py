@@ -2,8 +2,11 @@
 
 Covers the paper's Alg. 3 aggregation phase where the pipeline loop leans on
 it hardest: all-intra partitions (coarse graph collapses to pure self-loops),
-all-invalid levels (masked-out graphs), and the one-sort scatter compaction
-in ``graph/segment.py::groupby_sum`` vs the legacy two-sort argsort path.
+all-invalid levels (masked-out graphs), the one-sort scatter compaction in
+``graph/segment.py::groupby_sum`` vs the legacy two-sort argsort path, the
+FUSED one-sort ``remap_and_coarsen`` vs the two-step reference (bit-for-bit,
+the §Pipeline one-sort coarsening invariant), and the capacity-changing
+``shrink_graph`` compaction the cascade descends through.
 """
 import numpy as np
 import pytest
@@ -132,6 +135,99 @@ def test_coarsen_partially_masked_vertices():
     assert float(cg.total_volume()) == pytest.approx(4.0)
 
 
+# ------------------------------------------------------------ fused one-sort
+
+
+def _coarsen_two_step(g, com):
+    new_com, n_comm = aggregation.remap_communities(com, g.vertex_mask())
+    return new_com, n_comm, aggregation.coarsen_graph(g, new_com, n_comm)
+
+
+def _assert_graphs_bitwise(a, b):
+    for f in ("src", "dst", "w", "edge_mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f)
+    assert int(a.n_valid) == int(b.n_valid)
+    assert int(a.m_valid) == int(b.m_valid)
+    assert (a.n_max, a.m_max) == (b.n_max, b.m_max)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_remap_and_coarsen_matches_two_step(seed):
+    """The fused one-sort remap+coarsen must reproduce the two-step
+    reference bit-for-bit: new_com, n_comm, and every coarse-graph array
+    including the unspecified-slot sentinels."""
+    u, v, w, gt = sbm(150, 5, p_in=0.3, p_out=0.04, seed=seed)
+    g = from_numpy_edges(u, v, w, m_max=2 * len(u) + 37)   # padded capacity
+    rng = np.random.default_rng(seed)
+    # a messy, non-contiguous partition (not the ground truth): random
+    # labels drawn from a sparse id set, plus junk on the invalid slots
+    com = jnp.asarray(np.concatenate([
+        rng.choice(np.arange(0, 150, 7), size=150),
+        rng.integers(0, g.n_max, size=g.n_max - 150),
+    ]), jnp.int32)
+    nc1, n1, cg1 = _coarsen_two_step(g, com)
+    nc2, n2, cg2 = aggregation.remap_and_coarsen(g, com)
+    assert int(n1) == int(n2)
+    np.testing.assert_array_equal(np.asarray(nc1), np.asarray(nc2))
+    _assert_graphs_bitwise(cg1, cg2)
+
+
+def test_remap_and_coarsen_all_intra_and_empty():
+    # all-intra: pure self-loops (mirrors the two-step edge-case test)
+    k = 5
+    u, v, w, gt = ring_of_cliques(6, k)
+    keep = (u // k) == (v // k)
+    g = from_numpy_edges(u[keep], v[keep], w[keep], n=len(gt))
+    com = jnp.asarray(np.concatenate(
+        [gt, np.arange(len(gt), g.n_max)]), jnp.int32)
+    nc1, n1, cg1 = _coarsen_two_step(g, com)
+    nc2, n2, cg2 = aggregation.remap_and_coarsen(g, com)
+    assert int(n1) == int(n2) == 6
+    np.testing.assert_array_equal(np.asarray(nc1), np.asarray(nc2))
+    _assert_graphs_bitwise(cg1, cg2)
+
+    # fully masked-out level
+    ge = _empty_graph()
+    com = jnp.arange(ge.n_max, dtype=jnp.int32)
+    nc2, n2, cg2 = aggregation.remap_and_coarsen(ge, com)
+    assert int(n2) == 0
+    assert int(cg2.m_valid) == 0
+    assert not bool(np.asarray(cg2.edge_mask).any())
+    np.testing.assert_array_equal(
+        np.asarray(nc2), np.full(ge.n_max, ge.n_max, np.int32))
+
+
+def test_shrink_graph_preserves_live_content():
+    """Capacity descent: slicing a front-compacted coarse graph must keep
+    every live edge/vertex and only rewrite the padding sentinels."""
+    u, v, w, gt = sbm(120, 4, p_in=0.4, p_out=0.05, seed=13)
+    g = from_numpy_edges(u, v, w)
+    com = jnp.asarray(np.concatenate(
+        [gt, np.arange(len(gt), g.n_max)]), jnp.int32)
+    _, n_comm, cg = aggregation.remap_and_coarsen(g, com)
+    n_out = int(n_comm) + 2
+    m_out = int(cg.m_valid) + 3
+    sg = aggregation.shrink_graph(cg, n_out, m_out)
+    assert (sg.n_max, sg.m_max) == (n_out, m_out)
+    assert int(sg.n_valid) == int(cg.n_valid)
+    assert int(sg.m_valid) == int(cg.m_valid)
+    mv = int(cg.m_valid)
+    for f in ("src", "dst", "w"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sg, f))[:mv], np.asarray(getattr(cg, f))[:mv])
+    em = np.asarray(sg.edge_mask)
+    np.testing.assert_array_equal(
+        np.asarray(sg.src)[~em], np.full((~em).sum(), n_out, np.int32))
+    assert float(sg.total_volume()) == float(cg.total_volume())
+    # modularity invariant survives the capacity change
+    ident = jnp.arange(sg.n_max, dtype=jnp.int32)
+    assert float(modularity(sg, ident)) == pytest.approx(
+        float(modularity(g, jnp.asarray(
+            np.asarray(aggregation.remap_communities(
+                com, g.vertex_mask())[0]), jnp.int32))), abs=1e-6)
+
+
 # ------------------------------------------------------------ groupby compaction
 
 
@@ -189,3 +285,21 @@ def test_groupby_sum_all_invalid():
         valid=jnp.zeros((m,), bool))
     assert int(ng) == 0
     assert not bool(np.asarray(gv).any())
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_compact_scatter_matches_argsort(seed):
+    """The sort-free scatter compaction builds the SAME stable permutation
+    the legacy argsort did (full array, not just the valid prefix)."""
+    rng = np.random.default_rng(seed)
+    m = 131
+    mask = jnp.asarray(rng.random(m) < 0.6)
+    arrays = (jnp.arange(m, dtype=jnp.int32),
+              jnp.asarray(rng.standard_normal(m), jnp.float32))
+    out_s, n_s = seg.compact(mask, arrays, via="scatter")
+    out_a, n_a = seg.compact(mask, arrays, via="argsort")
+    assert int(n_s) == int(n_a)
+    for a, b in zip(out_s, out_a):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        seg.compact(mask, arrays, via="bogus")
