@@ -40,6 +40,16 @@ of compiled stage programs, and a bit-identical check —
 
   PYTHONPATH=src python -m benchmarks.perf_variants coarse_cascade \
       com-amazon algo=louvain repeat=3 backend=ell
+
+Aggregation mode (DESIGN.md §Aggregation kernel): time the sort-free binned
+coarsening against the one-sort fused oracle and the legacy two-step
+(remap sort + groupby sort) on every level's ACTUAL aggregation inputs,
+replayed at the cascade stage capacity each level runs under, with a
+bit-identical check per level and the Fig. 4-style per-level local-moving /
+aggregation split for both paths —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants aggregation \
+      com-amazon algo=louvain repeat=3
 """
 import json
 import os
@@ -724,10 +734,201 @@ def run_coarse_cascade(dataset: str = "com-amazon", algo: str = "louvain",
     return out
 
 
+def run_aggregation(dataset: str = "com-amazon", algo: str = "louvain",
+                    repeat: int = 3, backend: str = "segment"):
+    """Sort-free binned coarsening vs the one-sort oracle vs the two-step
+    reference (DESIGN.md §Aggregation kernel), per level and per cascade
+    stage capacity.
+
+    The per-level driver is replayed level by level to capture every level's
+    ACTUAL aggregation input (carried coarse graph + converged local-moving
+    labels); each input is then shrunk to the cascade stage capacity that
+    level would run under (``aggregation.shrink_graph`` — so every stage
+    capacity of the schedule is exercised) and three arms are timed on it,
+    interleaved best-of:
+
+      * ``binned``    — ``remap_and_coarsen_binned`` (bitmap-cumsum remap +
+                        hash-bin scatter merge; ``impl="auto"`` resolves to
+                        the Pallas rank kernel on TPU, the jnp ref off-TPU —
+                        the resolved impl and bin width are recorded).
+      * ``sort``      — ``remap_and_coarsen``, the fused one-sort oracle.
+      * ``two_step``  — ``remap_communities_sorted`` + ``coarsen_graph``
+                        (one n-sort + one m-sort), the original reference.
+
+    Outputs are checked bit-identical across all three per level (coarse
+    graph contents AND remap/count).  Also reported: whole-run louvain
+    end-to-end under ``aggregation="binned"`` vs ``"sort"``, and the
+    Fig. 4-style per-level local-moving / aggregation split for both
+    (the share the sort-free path shrinks).
+    """
+    import importlib
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    louvain_mod = importlib.import_module("repro.core.louvain")
+    from repro.core import aggregation
+    from repro.core.engine import SweepEngine
+    from repro.core.louvain import LouvainConfig, leiden, louvain
+    from repro.graph import datasets
+    from repro.kernels.common import (bin_table_bytes, pick_bin_width,
+                                      resolve_bin_impl)
+
+    lg = datasets.load(dataset)
+    g = lg.graph
+    out = {"mode": "aggregation", "dataset": dataset, "V": lg.n,
+           "E": lg.m_undirected, "backend": backend}
+    cfg = LouvainConfig(track_modularity=False, backend=backend)
+
+    # cascade stage capacities to replay under (same fallback as
+    # run_coarse_cascade so smoke-scale graphs still exercise the cascade)
+    sched = louvain_mod.auto_capacity_schedule(g.n_max, g.m_max)
+    if len(sched) == 1:
+        sched = louvain_mod.auto_capacity_schedule(
+            g.n_max, g.m_max, min_n=0,
+            n_floor=max(32, g.n_max // 16), m_floor=max(128, g.m_max // 16))
+    out["schedule"] = [list(c) for c in sched]
+
+    # ---- replay the per-level driver to capture each level's aggregation
+    # input: (carried coarse graph, converged local-moving labels)
+    pairs = []
+    cur = g
+    for level in range(cfg.max_levels):
+        spec = louvain_mod.engine_spec(
+            cfg, backend=cfg.backend if level == 0
+            else louvain_mod._coarse_backend(cfg.backend))
+        engine = SweepEngine(cur, spec)
+        res = engine.run_phase(
+            jnp.arange(cur.n_max, dtype=jnp.int32), cur.vertex_mask(),
+            it0=level * 1000, seed=cfg.seed, fused=True)
+        pairs.append((cur, res.labels))
+        new_com, n_comm, coarse = aggregation.remap_and_coarsen(
+            cur, res.labels)
+        if int(n_comm) == int(cur.n_valid):
+            break
+        cur = coarse
+
+    def two_step(gg, cc):
+        nc, k = aggregation.remap_communities_sorted(cc, gg.vertex_mask())
+        return nc, k, aggregation.coarsen_graph(gg, nc, k)
+
+    arms = {
+        "binned": lambda gg, cc: aggregation.remap_and_coarsen_binned(gg, cc),
+        "sort": aggregation.remap_and_coarsen,
+        "two_step": jax.jit(two_step),
+    }
+
+    per_level = []
+    identical = True
+    for level, (cur, com) in enumerate(pairs):
+        nv, mv = int(cur.n_valid), int(cur.m_valid)
+        # smallest stage capacity this level's live graph fits — where the
+        # cascade would actually run this aggregation
+        cap = sched[0]
+        for c in sched[1:]:
+            if nv <= c[0] and mv <= c[1]:
+                cap = c
+        if cap != (cur.n_max, cur.m_max):
+            cur = aggregation.shrink_graph(cur, *cap)
+            com = com[:cap[0]]
+        width = pick_bin_width(cur.n_max, cur.m_max)
+        impl = resolve_bin_impl("auto", bin_table_bytes(cur.n_max, width))
+
+        results = {k: jax.block_until_ready(f(cur, com))
+                   for k, f in arms.items()}  # warm/compile
+        same = all(
+            bool(jnp.array_equal(results["binned"][0], r[0]))
+            and bool(jnp.array_equal(results["binned"][1], r[1]))
+            and all(bool(jnp.array_equal(
+                getattr(results["binned"][2], f), getattr(r[2], f)))
+                for f in ("src", "dst", "w", "edge_mask", "n_valid",
+                          "m_valid"))
+            for r in (results["sort"], results["two_step"]))
+        identical &= same
+
+        best = {k: None for k in arms}
+        for _ in range(repeat):
+            for k, f in arms.items():  # interleaved so drift biases no arm
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(cur, com))
+                dt = time.perf_counter() - t0
+                best[k] = dt if best[k] is None else min(best[k], dt)
+        per_level.append({
+            "level": level, "n_valid": nv, "m_valid": mv,
+            "n_cap": cur.n_max, "m_cap": cur.m_max,
+            "bin_width": width, "bin_impl": impl,
+            "binned_s": best["binned"], "sort_s": best["sort"],
+            "two_step_s": best["two_step"],
+            "binned_speedup_vs_sort": best["sort"] / best["binned"],
+            "binned_speedup_vs_two_step": best["two_step"] / best["binned"],
+            "bit_identical": same,
+        })
+    out["per_level"] = per_level
+    out["bit_identical"] = identical
+
+    # per cascade stage capacity (the Fig. 4-style aggregation split the
+    # schedule shapes) and the headline totals
+    stages = {}
+    for r in per_level:
+        stages.setdefault((r["n_cap"], r["m_cap"]),
+                          {"binned_s": 0.0, "sort_s": 0.0, "two_step_s": 0.0,
+                           "levels": 0})
+        s = stages[(r["n_cap"], r["m_cap"])]
+        for k in ("binned_s", "sort_s", "two_step_s"):
+            s[k] += r[k]
+        s["levels"] += 1
+    out["per_stage"] = [
+        {"n_cap": c[0], "m_cap": c[1], **s,
+         "binned_speedup_vs_sort": s["sort_s"] / s["binned_s"]}
+        for c, s in sorted(stages.items(), reverse=True)]
+    for k in ("binned_s", "sort_s", "two_step_s"):
+        out[f"aggregation_{k}"] = sum(r[k] for r in per_level)
+    out["aggregation_speedup_vs_sort"] = (
+        out["aggregation_sort_s"] / out["aggregation_binned_s"])
+    out["aggregation_speedup_vs_two_step"] = (
+        out["aggregation_two_step_s"] / out["aggregation_binned_s"])
+
+    # ---- whole-run end-to-end + per-level phase split, binned vs sort
+    run_e2e = leiden if algo == "leiden" else louvain
+    cfgs = {"binned": cfg, "sort": cfg.replace(aggregation="sort")}
+    res_e2e = {k: run_e2e(g, c) for k, c in cfgs.items()}  # warm
+    out["e2e_bit_identical"] = bool(
+        jnp.array_equal(jnp.asarray(res_e2e["binned"].labels),
+                        jnp.asarray(res_e2e["sort"].labels)))
+    best = {k: None for k in cfgs}
+    for _ in range(repeat):
+        for k, c in cfgs.items():
+            t0 = time.perf_counter()
+            run_e2e(g, c)
+            dt = time.perf_counter() - t0
+            best[k] = dt if best[k] is None else min(best[k], dt)
+    out[f"{algo}_binned_s"] = best["binned"]
+    out[f"{algo}_sort_s"] = best["sort"]
+    out[f"{algo}_e2e_speedup"] = best["sort"] / best["binned"]
+
+    for k, c in cfgs.items():
+        res_t = run_e2e(g, c.replace(pipeline_fused=False,
+                                     per_level_timing=True))
+        split = []
+        for level in range(res_t.levels):
+            lm = res_t.timer.totals.get(f"L{level:02d}/local_moving", 0.0)
+            ag = res_t.timer.totals.get(f"L{level:02d}/aggregation", 0.0)
+            tot = lm + ag or 1e-12
+            split.append({"level": level, "local_moving_s": lm,
+                          "aggregation_s": ag,
+                          "aggregation_share": ag / tot})
+        out[f"{algo}_phase_split_{k}"] = split
+
+    print(json.dumps(out, indent=1))
+    return out
+
+
 _MODES = {"community": run_community, "level_fusion": run_level_fusion,
           "gather_fusion": run_gather_fusion,
           "table_streaming": run_table_streaming,
-          "coarse_cascade": run_coarse_cascade}
+          "coarse_cascade": run_coarse_cascade,
+          "aggregation": run_aggregation}
 
 
 def main():

@@ -15,6 +15,13 @@ Also reported: dominant term, MODEL_FLOPS (6·N_active·D for train,
 2·N_active·D + attention for inference), MODEL/HLO ratio (remat/redundancy
 waste), and roofline fraction = compute / max(all three) — the score axis.
 
+Also ingests the aggregation benchmark artifact (BENCH_aggregation.json,
+benchmarks/run.py `aggregation` mode): per cascade level, an analytic
+bytes-moved model of the sort-free binned path is priced against the
+819 GB/s HBM term, giving an HBM-floor time and the fraction of that
+floor the measured binned time achieves — the memory-roofline view of
+the aggregation phase.  Writes roofline_aggregation.{json,md}.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
 Writes benchmarks/artifacts/roofline_<mesh>.{json,md}.
 """
@@ -127,6 +134,69 @@ def render_md(rows, skipped, mesh_tag: str) -> str:
     return "\n".join(lines)
 
 
+def _agg_level_bytes(n: int, m: int, width: int, rounds: int = 4) -> float:
+    """Analytic bytes-moved model of one binned aggregation level at
+    capacity (n, m) and bin width W (kernels/aggregation/ops.py stages;
+    4-byte words throughout, ``rounds`` nominal probe rounds):
+
+      remap   bitmap scatter + cumsum + table gather        ~ 24n
+      keys    src/dst/mask gathers -> (cs, cd)              ~ 25m
+      gate    degree segment_sum                            ~  8m
+      probe   gather + scatter-min + gather, per round      ~ 12rm
+      table   init write + occupancy read                   ~  8(n+1)W
+      rank    per-edge row gather                           ~  4mW + 4m
+      output  epos + packed-id scatter + weight segment_sum ~ 24m
+    """
+    return (24.0 * n + 25.0 * m + 8.0 * m + 12.0 * rounds * m
+            + 8.0 * (n + 1) * width + 4.0 * m * width + 4.0 * m + 24.0 * m)
+
+
+def aggregation_rows():
+    """Ingest BENCH_aggregation[_smoke].json -> per-level HBM-roofline rows."""
+    path = os.path.join(ART, "BENCH_aggregation.json")
+    if not os.path.exists(path):
+        path = os.path.join(ART, "BENCH_aggregation_smoke.json")
+    if not os.path.exists(path):
+        return []
+    rows = []
+    for rec in json.load(open(path)):
+        for lv in rec["per_level"]:
+            b = _agg_level_bytes(lv["n_cap"], lv["m_cap"], lv["bin_width"])
+            floor = b / HBM_BW
+            rows.append({
+                "dataset": rec["dataset"], "level": lv["level"],
+                "n_cap": lv["n_cap"], "m_cap": lv["m_cap"],
+                "bin_width": lv["bin_width"], "bin_impl": lv["bin_impl"],
+                "model_bytes": b,
+                "hbm_floor_s": floor,
+                "binned_s": lv["binned_s"], "sort_s": lv["sort_s"],
+                "speedup_vs_sort": lv["binned_speedup_vs_sort"],
+                "hbm_roofline_fraction":
+                    floor / lv["binned_s"] if lv["binned_s"] else None,
+            })
+    return rows
+
+
+def render_aggregation_md(rows) -> str:
+    lines = [
+        "### Aggregation roofline — binned bytes-moved vs the "
+        f"{HBM_BW / 1e9:.0f} GB/s HBM term",
+        "",
+        "| dataset | level | cap (n, m) | W | impl | model MB | "
+        "HBM floor s | binned s | vs sort | HBM frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['dataset']} | {r['level']} | "
+            f"({r['n_cap']}, {r['m_cap']}) | {r['bin_width']} | "
+            f"{r['bin_impl']} | {r['model_bytes'] / 2**20:.2f} | "
+            f"{r['hbm_floor_s']:.3g} | {r['binned_s']:.3g} | "
+            f"{r['speedup_vs_sort']:.2f}x | "
+            f"{r['hbm_roofline_fraction']:.3g} |")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
@@ -151,6 +221,16 @@ def main(argv=None):
             f.write(md)
         print(md)
         all_rows[tag] = rows
+    agg = aggregation_rows()
+    if agg:
+        amd = render_aggregation_md(agg)
+        with open(os.path.join(ART, "roofline_aggregation.json"), "w") as f:
+            json.dump(agg, f, indent=1)
+        with open(os.path.join(ART, "roofline_aggregation.md"), "w") as f:
+            f.write(amd)
+        print()
+        print(amd)
+    all_rows["aggregation"] = agg
     return all_rows
 
 

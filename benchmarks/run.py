@@ -20,6 +20,10 @@
             fixed-capacity pipeline vs per-level, with the Fig. 4 level-0 /
             coarse-tail split, stage-program count and bit-identical check
             (artifact: BENCH_coarse_cascade.json)
+  aggregation — sort-free binned coarsening vs the one-sort oracle vs the
+            two-step reference, per level and per cascade stage capacity,
+            with bit-identical checks and the per-level aggregation share
+            for both paths (artifact: BENCH_aggregation.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -353,6 +357,38 @@ def bench_coarse_cascade(datasets=("com-amazon",)):
     return rows
 
 
+# ------------------------------------------------------------------ aggregation
+
+
+def bench_aggregation(datasets=("com-amazon", "com-dblp")):
+    """Sort-free binned coarsening vs the one-sort oracle vs two-step
+    (DESIGN.md §Aggregation kernel) — the measurement behind replacing the
+    coarsening GroupBy's lax.sort with the binned scatter kernel."""
+    from benchmarks.perf_variants import run_aggregation
+    rows = []
+    for name in datasets:
+        rec = run_aggregation(name, algo="louvain", repeat=3)
+        rows.append(rec)
+        sp = rec["aggregation_speedup_vs_sort"]
+        print(f"[aggregation] {name:18s} "
+              f"sort {rec['aggregation_sort_s']*1e3:.2f}ms -> "
+              f"binned {rec['aggregation_binned_s']*1e3:.2f}ms ({sp:.2f}x)  "
+              f"two-step {rec['aggregation_two_step_s']*1e3:.2f}ms  "
+              f"e2e {rec['louvain_e2e_speedup']:.2f}x  "
+              f"bit_identical={rec['bit_identical']}")
+        for r in rec["per_level"]:
+            print(f"    L{r['level']:02d} cap=({r['n_cap']},{r['m_cap']}) "
+                  f"W={r['bin_width']} impl={r['bin_impl']} "
+                  f"sort={r['sort_s']*1e3:.2f}ms "
+                  f"binned={r['binned_s']*1e3:.2f}ms "
+                  f"({r['binned_speedup_vs_sort']:.2f}x)")
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_aggregation{suffix}", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -374,6 +410,7 @@ ALL = {
     "gather_fusion": bench_gather_fusion,
     "table_streaming": bench_table_streaming,
     "coarse_cascade": bench_coarse_cascade,
+    "aggregation": bench_aggregation,
     "roofline": bench_roofline,
 }
 

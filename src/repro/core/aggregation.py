@@ -12,17 +12,27 @@ equals the directed intra weight — preserving vol/deg/modularity invariants
 (see tests/test_louvain.py::test_coarsen_preserves_modularity).
 
 Outputs keep static capacities with masks, so every coarsening level runs
-under one compiled program per capacity.  Two coarsening paths exist:
+under one compiled program per capacity.  Three coarsening paths exist:
 
-* ``remap_and_coarsen`` (default in both louvain drivers): steps 1-3 fused
-  into ONE ``lax.sort`` over the combined (m edges + n vertices) entry list —
-  the one-sort coarsening invariant of DESIGN.md §Pipeline.  Vertex entries
-  (sorted ahead of their community's edges via a -1 dst key) enumerate the
-  contiguous ids; edge runs are grouped, summed and scatter-compacted off
-  the SAME sorted order.
-* ``remap_communities`` + ``coarsen_graph``: the two-step reference path
-  (one n-sort + one m-sort), kept as the documented oracle — bit-for-bit
-  identical to the fused path (tests/test_aggregation.py).
+* ``remap_and_coarsen_binned`` (default in both louvain drivers, via the
+  ``remap_and_coarsen_by`` dispatch): NO sort anywhere — the sort-free
+  invariant of DESIGN.md §Pipeline.  The remap is a presence bitmap +
+  ``cumsum`` (``graph/segment.py contiguize_ids``) and the parallel-edge
+  merge scatter-accumulates weights into dense per-src-community bin rows
+  (``kernels/aggregation``), with a ``lax.cond``-gated fallback onto the
+  one-sort path for rows over the static bin width.
+* ``remap_and_coarsen`` (``LouvainConfig.aggregation="sort"``): steps 1-3
+  fused into ONE ``lax.sort`` over the combined (m edges + n vertices)
+  entry list — the retired default, kept as the binned path's parity
+  ORACLE.  Vertex entries (sorted ahead of their community's edges via a
+  -1 dst key) enumerate the contiguous ids; edge runs are grouped, summed
+  and scatter-compacted off the SAME sorted order.
+* ``remap_communities_sorted`` + ``coarsen_graph``: the two-step reference
+  path (one n-sort + one m-sort), the original oracle.
+
+All three produce bit-for-bit identical coarse graphs, including the
+unspecified-slot conventions (tests/test_aggregation.py), so
+``shrink_graph`` and the cascade boundary sync are agnostic to the path.
 
 ``shrink_graph`` compacts a coarsened graph into smaller static capacities
 for the capacity-scheduled cascade (DESIGN.md §Pipeline): coarsening output
@@ -39,16 +49,34 @@ import jax.numpy as jnp
 
 from repro.graph import segment as seg
 from repro.graph.structure import Graph
+from repro.kernels.aggregation import binned_coarsen
+
+AGGREGATION_METHODS = ("binned", "sort")
 
 
 @jax.jit
 def remap_communities(com: jax.Array, vertex_mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Contiguize community ids.
+    """Contiguize community ids — sort-free.
+
+    Presence bitmap + ``cumsum`` (``graph/segment.py contiguize_ids``); the
+    historical sorted version survives as ``remap_communities_sorted`` and
+    the two agree bitwise (tests/test_aggregation.py).
 
     Returns (new_com, n_comm): ``new_com[v] ∈ [0, n_comm)`` for valid v,
     ``n_max`` sentinel for invalid v.  Ordering is by old community id
     (deterministic).
     """
+    n = com.shape[0]
+    sentinel = jnp.int32(n)
+    table, n_comm = seg.contiguize_ids(com, vertex_mask, n)
+    new_com = jnp.where(vertex_mask, table[jnp.clip(com, 0, n - 1)], sentinel)
+    return new_com, n_comm
+
+
+@jax.jit
+def remap_communities_sorted(com: jax.Array, vertex_mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sorted contiguize oracle (the pre-sort-free ``remap_communities``):
+    one n-sort + run-detect + scatter, Arkouda ``GroupBy`` keys."""
     n = com.shape[0]
     sentinel = jnp.int32(n)
     key = jnp.where(vertex_mask, com, sentinel)
@@ -162,6 +190,43 @@ def remap_and_coarsen(
         sorted_by="src",
     )
     return new_com, n_comm, cg
+
+
+@partial(jax.jit, static_argnames=("width", "impl"))
+def remap_and_coarsen_binned(
+    g: Graph, com: jax.Array, *, width: int | None = None, impl: str = "auto"
+) -> Tuple[jax.Array, jax.Array, Graph]:
+    """Sort-free remap + coarsen (DESIGN.md §Aggregation kernel).
+
+    Bitmap-``cumsum`` remap followed by the binned scatter merge
+    (``kernels/aggregation.binned_coarsen``); bit-for-bit identical to the
+    one-sort ``remap_and_coarsen`` oracle, including unspecified-slot
+    conventions, so downstream ``shrink_graph`` / cascade boundary sync run
+    unchanged.  ``width`` defaults to the capacity-derived
+    ``kernels.common.pick_bin_width`` menu pick (static at trace time).
+
+    Returns ``(new_com, n_comm, coarse_graph)``.
+    """
+    new_com, n_comm = remap_communities(com, g.vertex_mask())
+    cg = binned_coarsen(g, new_com, n_comm, width=width, impl=impl)
+    return new_com, n_comm, cg
+
+
+def remap_and_coarsen_by(
+    method: str, g: Graph, com: jax.Array
+) -> Tuple[jax.Array, jax.Array, Graph]:
+    """Dispatch one aggregation step by method name.
+
+    ``"binned"`` (the default everywhere) runs the sort-free path;
+    ``"sort"`` keeps the one-sort fused path selectable as the documented
+    oracle (``LouvainConfig.aggregation``).
+    """
+    if method not in AGGREGATION_METHODS:
+        raise ValueError(
+            f"unknown aggregation {method!r}, want one of {AGGREGATION_METHODS}")
+    if method == "sort":
+        return remap_and_coarsen(g, com)
+    return remap_and_coarsen_binned(g, com)
 
 
 def shrink_graph(g: Graph, n_max: int, m_max: int) -> Graph:

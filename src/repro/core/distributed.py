@@ -131,7 +131,8 @@ class DistLouvainResult:
 
 @lru_cache(maxsize=None)
 def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
-                              spec: EngineSpec, max_levels: int):
+                              spec: EngineSpec, max_levels: int,
+                              agg_method: str = "binned"):
     """Build the jitted whole-run distributed pipeline (DESIGN.md §Pipeline).
 
     The level loop runs INSIDE the shard_map worker, nested around the
@@ -190,13 +191,14 @@ def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
             return com, sweeps.astype(jnp.int32)
 
         def aggregate(cur: Graph, com, assign):
-            """One-sort remap+coarsen + pmax'd convergence (shared helper).
+            """Sort-free (or one-sort) remap+coarsen + pmax'd convergence.
 
-            ``com`` is replicated, so the fused ``remap_and_coarsen`` runs
-            identically on every device with no communication; only the
-            community count is collectively merged for the lockstep
-            predicate (its local value already equals the pmax)."""
-            new_com, n_comm, cg = aggregation.remap_and_coarsen(cur, com)
+            ``com`` is replicated, so the coarsening runs identically on
+            every device with no communication; only the community count is
+            collectively merged for the lockstep predicate (its local value
+            already equals the pmax)."""
+            new_com, n_comm, cg = aggregation.remap_and_coarsen_by(
+                agg_method, cur, com)
             n_comm = jax.lax.pmax(n_comm, axes)  # lockstep collective merge
             done = n_comm == cur.n_valid         # Alg. 3 l.6, on device
             macro = new_com[jnp.clip(assign, 0, n - 1)]
@@ -280,6 +282,7 @@ def distributed_louvain(
     move_prob: float = 0.5,
     singleton_rule: bool = True,
     pipeline_fused: bool = True,
+    aggregation_method: str = "binned",
 ) -> DistLouvainResult:
     timer = Timer()
     n = g.n_max
@@ -297,7 +300,7 @@ def distributed_louvain(
             part = partition_edges_by_dst(g, mesh.devices.size)
             src, dst, w, emask = shard_edges(part, mesh)
         pipe = make_distributed_pipeline(mesh, n, part.m_pad, spec,
-                                         max_levels)
+                                         max_levels, aggregation_method)
         with timer.phase("pipeline"):
             out = pipe(src, dst, w, emask, jnp.uint32(seed), g.n_valid)
             (final, n_final, levels, q, sweeps_hist,
@@ -336,7 +339,8 @@ def distributed_louvain(
             )
         sweeps_per_level.append(int(sweeps))
         with timer.phase("aggregation"):
-            new_com, n_comm, coarse = aggregation.remap_and_coarsen(cur, com)
+            new_com, n_comm, coarse = aggregation.remap_and_coarsen_by(
+                aggregation_method, cur, com)
             n_comm_per_level.append(int(n_comm))
             done = int(n_comm) == int(cur.n_valid)
             if not done:

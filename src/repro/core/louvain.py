@@ -126,6 +126,10 @@ class LouvainConfig(ConfigBase):
     max_sweeps: int = 25        # Alg. 2 maxIteration
     sweep_threshold: int = 0    # stop local-moving when ΔN <= this
     backend: str = "segment"    # segment | ell | pallas
+    # Coarsening path (DESIGN.md §Aggregation kernel): "binned" is the
+    # sort-free scatter-accumulation default; "sort" selects the one-sort
+    # fused remap+coarsen, kept as the bit-for-bit parity oracle.
+    aggregation: str = "binned"  # binned | sort
     # ell/pallas table layout: VMEM-resident vs windowed streaming; "auto"
     # resolves from the VMEM byte budget (DESIGN.md §Kernels)
     table_mode: str = "auto"    # auto | resident | streamed
@@ -167,6 +171,10 @@ class LouvainConfig(ConfigBase):
         if self.refine_sweeps < 1:
             raise ValueError(
                 f"refine_sweeps must be >= 1, got {self.refine_sweeps}")
+        if self.aggregation not in aggregation.AGGREGATION_METHODS:
+            raise ValueError(
+                f"aggregation must be one of "
+                f"{aggregation.AGGREGATION_METHODS}, got {self.aggregation!r}")
         _validate_schedule(self.capacity_schedule)
 
 
@@ -285,7 +293,8 @@ def _graph_arrays(g: Graph):
 @lru_cache(maxsize=None)
 def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
               refine_spec: Optional[EngineSpec], max_levels: int,
-              track_modularity: bool, next_caps: Optional[Tuple[int, int]]):
+              track_modularity: bool, next_caps: Optional[Tuple[int, int]],
+              agg_method: str = "binned"):
     """Build one jitted cascade stage (DESIGN.md §Pipeline).
 
     ``spec0 is not None`` marks stage 0: level 0 is peeled out of the loop
@@ -313,8 +322,8 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
         arange_n = jnp.arange(n, dtype=jnp.int32)
 
         def run_level(cur: Graph, assign, init_com, level_u32, spec, ell):
-            """One level: fused local-moving → one-sort remap+coarsen →
-            (refine).
+            """One level: fused local-moving → sort-free (or one-sort)
+            remap+coarsen → (refine).
 
             Mirrors one iteration of the per-level driver exactly; returns
             the next level's graph arrays + bookkeeping and this level's
@@ -324,9 +333,11 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
             com, _, sweeps, dn_h, _act_h = device_phase(
                 spec, cur, ell, init_com, vmask, it0, seed)
             if refine_spec is None:
-                # ONE lax.sort per aggregation: the remap is fused into the
-                # coarsening GroupBy (DESIGN.md §Pipeline one-sort invariant)
-                new_com, n_comm, nxt = aggregation.remap_and_coarsen(cur, com)
+                # sort-free binned coarsening by default (DESIGN.md
+                # §Pipeline sort-free invariant); "sort" selects the fused
+                # one-sort oracle — both bit-for-bit identical
+                new_com, n_comm, nxt = aggregation.remap_and_coarsen_by(
+                    agg_method, cur, com)
             else:
                 # Leiden aggregates by the REFINED partition below; only the
                 # macro remap is needed here
@@ -344,8 +355,8 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                     ref, _, _, _, _ = device_phase(
                         refine_spec, cur, None, arange_n, vmask,
                         it0 + jnp.uint32(500), seed, restrict=com)
-                    new_ref, n_ref, nxt_r = aggregation.remap_and_coarsen(
-                        cur, ref)
+                    new_ref, n_ref, nxt_r = aggregation.remap_and_coarsen_by(
+                        agg_method, cur, ref)
                     # macro seed as the CONTIGUIZED macro id (all members of
                     # a refined group share it): values < n_comm stay valid
                     # under any later stage capacity, and the relabeling is
@@ -510,7 +521,8 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
             fn = _stage_fn(spec0 if k == 0 else None,
                            _cascade_coarse_spec(cfg, cascade, width),
                            refine_spec, cfg.max_levels, cfg.track_modularity,
-                           caps[k + 1] if k + 1 < len(caps) else None)
+                           caps[k + 1] if k + 1 < len(caps) else None,
+                           cfg.aggregation)
             (arrays, assign, init_com, macro, hists, level, done, nv, mv,
              max_deg, final_assign, n_final, q_final) = fn(
                 g_k, ell_k, g0, seed_a, assign, init_com, macro, level,
@@ -650,14 +662,15 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
         delta_n_per_level.append(res.delta_n_history)
 
         with _tphase(timer, "aggregation", level, cfg.per_level_timing):
-            # one-sort coarsening (the fused-pipeline default; bit-identical
-            # to the two-step remap_communities + coarsen_graph reference)
+            # sort-free binned coarsening by default; "sort" keeps the fused
+            # one-sort oracle — bit-identical either way, and also to the
+            # two-step remap_communities_sorted + coarsen_graph reference
             if cfg.refine:
                 new_com, n_comm = aggregation.remap_communities(
                     com, cur.vertex_mask())
             else:
-                new_com, n_comm, coarse = aggregation.remap_and_coarsen(
-                    cur, com)
+                new_com, n_comm, coarse = aggregation.remap_and_coarsen_by(
+                    cfg.aggregation, cur, com)
             # macro labels on ORIGINAL vertices (the result partition); under
             # refinement `assign` tracks the finer refined chain instead
             macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
@@ -670,8 +683,8 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
                 # level's local-moving with each super-vertex's macro id
                 with _tphase(timer, "refinement", level, cfg.per_level_timing):
                     ref = _refine_partition(cur, com, cfg, level)
-                new_ref, n_ref, coarse = aggregation.remap_and_coarsen(
-                    cur, ref)
+                new_ref, n_ref, coarse = aggregation.remap_and_coarsen_by(
+                    cfg.aggregation, cur, ref)
                 # contiguized macro label of each refined group (refined ⊆
                 # macro; monotone relabeling — see _stage_fn.run_level)
                 macro_of_ref = jax.ops.segment_max(

@@ -121,6 +121,28 @@ def compact(
     return tuple(a[perm] for a in arrays), count
 
 
+def contiguize_ids(
+    keys: jax.Array, valid: jax.Array, size: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Sort-free dense-id assignment for integer keys in ``[0, size)``.
+
+    Presence bitmap + ``cumsum`` instead of the historical sort + run-detect
+    (the sort-free invariant of DESIGN.md §Pipeline): scatter 1s at the
+    present keys, then the exclusive prefix sum over the bitmap IS the dense
+    id, ascending in raw-key order — the same deterministic ordering the
+    sorted path produced.
+
+    Returns ``(table, count)``: ``table[k]`` is the dense id of raw key
+    ``k`` for present keys and the ``size`` sentinel for absent ones
+    (``table`` has ``size`` entries); ``count`` is the number of distinct
+    present keys.
+    """
+    idx = jnp.clip(jnp.where(valid, keys, size), 0, size)
+    p = jnp.zeros((size + 1,), jnp.int32).at[idx].set(1)[:size]
+    table = jnp.where(p == 1, jnp.cumsum(p) - 1, jnp.int32(size))
+    return table, jnp.sum(p)
+
+
 def segment_argmax(
     scores: jax.Array,
     candidates: jax.Array,

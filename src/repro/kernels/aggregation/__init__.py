@@ -1,0 +1,2 @@
+"""Sort-free binned aggregation kernels (DESIGN.md §Aggregation kernel)."""
+from repro.kernels.aggregation.ops import binned_coarsen  # noqa: F401

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the binned aggregation rank pass.
+
+After the hash-probe insert (ops.py) every valid edge's destination
+community sits in exactly one slot of its source community's (width,)
+bin row, and each row holds the DISTINCT destination communities of that
+source community.  The coarse graph's canonical slot order (src-sorted,
+dst-ascending within src, front-compacted — `core/aggregation.py`'s
+contract) then only needs, per edge, the RANK of its destination key
+within its row: a gather of the row plus a masked compare-and-count,
+with no sort anywhere.
+
+The Pallas kernel (kernel.py) runs this SAME function on the
+VMEM-resident key table, so kernel ≡ ref bit-compatibility holds by
+construction — the local_move pattern (DESIGN.md §Kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bin_rank_ref(
+    keys_flat: jax.Array,   # ((n_rows)·width + pad,) int32 — bin-key table
+    cs: jax.Array,          # (R,) int32 — per-edge row (source community)
+    cd: jax.Array,          # (R,) int32 — per-edge key (destination community)
+    *,
+    width: int,
+    empty: int,
+) -> jax.Array:
+    """Per-edge within-row rank: # occupied slots in row ``cs`` with a key
+    strictly below ``cd``.  Rows indexed beyond the live communities must
+    exist in the table (the +1 sink row) and stay ``empty`` so padded or
+    masked edges rank harmlessly to 0."""
+    iota_w = jnp.arange(width, dtype=jnp.int32)
+    row_keys = keys_flat[cs[:, None] * width + iota_w[None, :]]  # (R, width)
+    less = (row_keys != empty) & (row_keys < cd[:, None])
+    return jnp.sum(less.astype(jnp.int32), axis=1)

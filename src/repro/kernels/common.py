@@ -104,6 +104,52 @@ def pick_ell_width(max_deg: int | None, n_cap: int, m_cap: int) -> int:
     return STAGE_WIDTH_MENU[-1]
 
 
+# ---------------------------------------------------------------- aggregation
+
+BIN_IMPLS = ("auto", "kernel", "ref")
+
+
+def pick_bin_width(n_cap: int, m_cap: int) -> int:
+    """Static per-src-community bin-row width for the sort-free aggregation
+    (DESIGN.md §Aggregation kernel).
+
+    Rows hold the DISTINCT destination communities of one source community,
+    so the width must cover the coarse graph's out-degree, which is unknown
+    at trace time; the pick reuses the cascade's 4×-average-degree heuristic
+    over the STAGE capacities (same menu as the traced ELL re-bucketing, so
+    the number of distinct compiled programs stays bounded).  Rows that
+    exceed the width at runtime fall back to the one-sort path via a
+    ``lax.cond`` gate — the width only affects performance, never results.
+    """
+    return pick_ell_width(None, n_cap, m_cap)
+
+
+def bin_table_bytes(n_cap: int, width: int) -> int:
+    """HBM/VMEM footprint of the (n_cap+1, width) int32 bin-key table (the
+    +1 row is the sink for masked edges)."""
+    return 4 * (n_cap + 1) * width
+
+
+def resolve_bin_impl(impl: str, table_bytes: int,
+                     budget_bytes: int | None = None) -> str:
+    """Kernel-vs-ref policy for the binned aggregation rank pass.
+
+    ``auto`` uses the Pallas kernel when running on a real TPU AND the bin
+    table fits HALF the VMEM budget (the resident-table contract of
+    DESIGN.md §Kernels — the other half covers the gathered (R_blk, W)
+    tiles and the double-buffered pipeline); otherwise the pure-jnp ref
+    path runs (interpret-mode emulation would only add per-grid-step
+    dispatch overhead off-TPU, and an over-budget table cannot be resident).
+    """
+    if impl not in BIN_IMPLS:
+        raise ValueError(f"unknown bin impl {impl!r}, want one of {BIN_IMPLS}")
+    if impl != "auto":
+        return impl
+    if table_bytes > vmem_budget_bytes(budget_bytes) // 2:
+        return "ref"
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
 def resolve_table_mode(mode: str, table_bytes: int,
                        budget_bytes: int | None = None) -> str:
     """Resident-vs-streamed policy for the local_move per-vertex tables.

@@ -5,8 +5,13 @@ it hardest: all-intra partitions (coarse graph collapses to pure self-loops),
 all-invalid levels (masked-out graphs), the one-sort scatter compaction in
 ``graph/segment.py::groupby_sum`` vs the legacy two-sort argsort path, the
 FUSED one-sort ``remap_and_coarsen`` vs the two-step reference (bit-for-bit,
-the §Pipeline one-sort coarsening invariant), and the capacity-changing
-``shrink_graph`` compaction the cascade descends through.
+the §Pipeline one-sort coarsening invariant), the capacity-changing
+``shrink_graph`` compaction the cascade descends through, and the SORT-FREE
+binned path (DESIGN.md §Aggregation kernel): bitmap-cumsum remap + hash-bin
+scatter merge vs the one-sort oracle, bit-for-bit, across multigraphs,
+forced-overflow fallbacks, capacity-padded graphs, every cascade stage
+capacity, the Pallas rank kernel vs its jnp ref, and end-to-end
+louvain/leiden runs under ``aggregation="binned"`` vs ``"sort"``.
 """
 import numpy as np
 import pytest
@@ -285,6 +290,252 @@ def test_groupby_sum_all_invalid():
         valid=jnp.zeros((m,), bool))
     assert int(ng) == 0
     assert not bool(np.asarray(gv).any())
+
+
+# ------------------------------------------------------------ sort-free binned
+
+
+def _random_multigraph(rng, n, m, *, n_pad=0, m_pad=0, mask_p=0.85,
+                       weighted=True):
+    """A directed multigraph with duplicate/parallel edges, random float
+    weights, partial edge masks and capacity padding — the adversarial input
+    shape for the binned-vs-sort parity contract."""
+    n_max, m_max = n + n_pad, m + m_pad
+    src = rng.integers(0, n, m)
+    # bias toward duplicates: half the edges reuse an earlier endpoint pair
+    dst = rng.integers(0, n, m)
+    dup = rng.random(m) < 0.5
+    if m > 1:
+        j = rng.integers(0, m, m)
+        src = np.where(dup, src[j], src)
+        dst = np.where(dup, dst[j], dst)
+    w = (rng.random(m).astype(np.float32) if weighted
+         else np.ones(m, np.float32))
+    em = np.zeros(m_max, bool)
+    em[:m] = rng.random(m) < mask_p
+    pad_i = np.full(m_pad, n_max, np.int32)
+    return Graph(
+        src=jnp.asarray(np.concatenate([src.astype(np.int32), pad_i])),
+        dst=jnp.asarray(np.concatenate([dst.astype(np.int32), pad_i])),
+        w=jnp.asarray(np.concatenate([w, np.zeros(m_pad, np.float32)])),
+        edge_mask=jnp.asarray(em),
+        n_valid=jnp.int32(n), m_valid=jnp.int32(m),
+        n_max=n_max, m_max=m_max, sorted_by=None)
+
+
+def _random_partition(rng, g, groups=None):
+    n, n_max = int(g.n_valid), g.n_max
+    groups = groups if groups is not None else max(1, n // 3)
+    return jnp.asarray(np.concatenate([
+        rng.integers(0, groups, n),
+        rng.integers(0, n_max, n_max - n),     # junk on invalid slots
+    ]), jnp.int32)
+
+
+def _assert_binned_matches_oracle(g, com, **kw):
+    nc1, n1, cg1 = aggregation.remap_and_coarsen(g, com)
+    nc2, n2, cg2 = aggregation.remap_and_coarsen_binned(g, com, **kw)
+    np.testing.assert_array_equal(np.asarray(nc1), np.asarray(nc2))
+    assert int(n1) == int(n2)
+    _assert_graphs_bitwise(cg1, cg2)
+
+
+def test_remap_communities_bitmap_matches_sorted():
+    """The sort-free (presence bitmap + cumsum) remap must reproduce the
+    sorted oracle bit-for-bit, junk-on-invalid-slots included."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n_max = int(rng.integers(2, 80))
+        n = int(rng.integers(0, n_max + 1))
+        com = jnp.asarray(rng.integers(0, n_max, n_max), jnp.int32)
+        vmask = jnp.asarray(np.arange(n_max) < n)
+        nc1, k1 = aggregation.remap_communities_sorted(com, vmask)
+        nc2, k2 = aggregation.remap_communities(com, vmask)
+        assert int(k1) == int(k2)
+        np.testing.assert_array_equal(np.asarray(nc1), np.asarray(nc2))
+
+
+def test_contiguize_ids_basics():
+    table, count = seg.contiguize_ids(
+        jnp.asarray([5, 2, 5, 9], jnp.int32),
+        jnp.asarray([True, True, True, False]), 10)
+    assert int(count) == 2
+    got = np.asarray(table)
+    assert got[2] == 0 and got[5] == 1
+    # absent keys (incl. the masked 9) map to the size sentinel
+    assert all(got[k] == 10 for k in range(10) if k not in (2, 5))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("width", [16, 64, None])
+def test_binned_matches_oracle_random_multigraphs(seed, width):
+    """The sort-free binned coarsening must reproduce the one-sort oracle
+    bit-for-bit — parallel edges merged to identical float sums, identical
+    slot order and padding sentinels — at every width, including widths
+    small enough to trip the overflow fallback."""
+    rng = np.random.default_rng(seed)
+    for _ in range(4):
+        n = int(rng.integers(4, 70))
+        m = int(rng.integers(4, 400))
+        g = _random_multigraph(rng, n, m, n_pad=int(rng.integers(0, 9)),
+                               m_pad=int(rng.integers(0, 17)))
+        com = _random_partition(rng, g)
+        _assert_binned_matches_oracle(g, com, width=width, impl="ref")
+
+
+def test_binned_all_intra_and_empty():
+    # all-intra partition: pure self-loop coarse graph
+    k = 5
+    u, v, w, gt = ring_of_cliques(6, k)
+    keep = (u // k) == (v // k)
+    g = from_numpy_edges(u[keep], v[keep], w[keep], n=len(gt))
+    com = jnp.asarray(np.concatenate(
+        [gt, np.arange(len(gt), g.n_max)]), jnp.int32)
+    _assert_binned_matches_oracle(g, com, impl="ref")
+
+    # fully masked-out level
+    ge = _empty_graph()
+    _assert_binned_matches_oracle(
+        ge, jnp.arange(ge.n_max, dtype=jnp.int32), impl="ref")
+
+
+def test_binned_capacity_padded_sparse_graph():
+    """Capacities far above the live counts (the cascade's padded stages):
+    the sentinel/sink routing must keep the parity exact."""
+    rng = np.random.default_rng(7)
+    g = _random_multigraph(rng, 12, 30, n_pad=100, m_pad=400)
+    com = _random_partition(rng, g, groups=5)
+    for width in (16, 256):
+        _assert_binned_matches_oracle(g, com, width=width, impl="ref")
+
+
+def test_binned_forced_overflow_takes_sort_fallback():
+    """A community with more distinct neighbor communities than the bin
+    width must raise the overflow predicate and fall back to the one-sort
+    path — bit-for-bit with the oracle either way."""
+    from repro.kernels.aggregation.ops import community_edge_keys, insert_bins
+
+    n = 40
+    # star: vertex 0's community sees 30 distinct neighbor communities
+    src = np.zeros(30, np.int32)
+    dst = np.arange(1, 31, dtype=np.int32)
+    g = graph_from_arrays(jnp.asarray(src), jnp.asarray(dst),
+                          jnp.ones(30, jnp.float32), n_max=n, m_max=80,
+                          n_valid=n)
+    com = jnp.arange(n, dtype=jnp.int32)   # singletons: out-degree 30 > 16
+    new_com, _ = aggregation.remap_communities(com, g.vertex_mask())
+    cs, cd = community_edge_keys(g, new_com)
+    _, _, overflow, rounds = insert_bins(g, cs, cd, width=16)
+    assert bool(overflow)
+    assert int(rounds) == 0        # the degree pre-gate skipped probing
+    _assert_binned_matches_oracle(g, com, width=16, impl="ref")
+    # at width 64 the same graph fits the bins
+    _, _, overflow64, _ = insert_bins(g, cs, cd, width=64)
+    assert not bool(overflow64)
+    _assert_binned_matches_oracle(g, com, width=64, impl="ref")
+
+
+def test_binned_every_cascade_stage_capacity():
+    """Parity at every capacity of the cascade schedule (and so every
+    STAGE_WIDTH_MENU pick the capacities induce): shrink a real coarsening
+    chain into each stage and compare binned vs oracle there."""
+    from repro.core.louvain import auto_capacity_schedule
+
+    u, v, w, gt = sbm(300, 6, p_in=0.3, p_out=0.03, seed=5)
+    g = from_numpy_edges(u, v, w)
+    sched = auto_capacity_schedule(g.n_max, g.m_max, min_n=0,
+                                   n_floor=max(16, g.n_max // 64),
+                                   m_floor=max(64, g.m_max // 64))
+    assert len(sched) > 1
+    rng = np.random.default_rng(5)
+    com = jnp.asarray(np.concatenate(
+        [gt, np.arange(len(gt), g.n_max)]), jnp.int32)
+    _, _, cg = aggregation.remap_and_coarsen(g, com)
+    for cap in sched:
+        if int(cg.n_valid) > cap[0] or int(cg.m_valid) > cap[1]:
+            continue
+        cur = (aggregation.shrink_graph(cg, *cap)
+               if cap != (cg.n_max, cg.m_max) else cg)
+        com_c = _random_partition(rng, cur, groups=max(1, int(cur.n_valid)))
+        _assert_binned_matches_oracle(cur, com_c)   # width=None: menu pick
+        _assert_binned_matches_oracle(cur, com_c, width=16, impl="ref")
+
+
+def test_bin_rank_kernel_matches_ref():
+    """The Pallas rank kernel (interpret mode off-TPU) must agree with the
+    jnp ref on the same post-insert key table — the kernel ≡ ref leg of the
+    kernel's by-construction parity contract."""
+    from repro.kernels.aggregation.kernel import bin_rank_pallas
+    from repro.kernels.aggregation.ops import community_edge_keys, insert_bins
+    from repro.kernels.aggregation.ref import bin_rank_ref
+
+    rng = np.random.default_rng(11)
+    g = _random_multigraph(rng, 24, 160, n_pad=4, m_pad=8)
+    com = _random_partition(rng, g, groups=9)
+    new_com, _ = aggregation.remap_communities(com, g.vertex_mask())
+    cs, cd = community_edge_keys(g, new_com)
+    for width in (64, 128):
+        keys, _, overflow, _ = insert_bins(g, cs, cd, width=width)
+        assert not bool(overflow)
+        kf = keys[:-1]
+        cs_c = jnp.clip(cs, 0, g.n_max)
+        r_ref = bin_rank_ref(kf, cs_c, cd, width=width, empty=g.n_max)
+        r_ker = bin_rank_pallas(kf, cs_c, cd, width=width, empty=g.n_max,
+                                interpret=True, row_block=32)
+        np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_ker))
+
+
+def test_binned_kernel_impl_full_coarsen_matches_ref():
+    """binned_coarsen with the Pallas kernel rank pass (interpret mode) must
+    equal the oracle too — the end-to-end kernel-impl leg."""
+    from repro.kernels import common as kc
+
+    rng = np.random.default_rng(13)
+    g = _random_multigraph(rng, 20, 120)
+    com = _random_partition(rng, g, groups=7)
+    # interpret-mode pallas is slow; force it only for this small case
+    orig = kc.default_interpret
+    try:
+        kc.default_interpret = lambda: True
+        _assert_binned_matches_oracle(g, com, width=16, impl="kernel")
+    finally:
+        kc.default_interpret = orig
+
+
+def test_aggregation_dispatch_and_config_validation():
+    from repro.core.louvain import LouvainConfig
+
+    with pytest.raises(ValueError):
+        aggregation.remap_and_coarsen_by("bogus", _empty_graph(),
+                                         jnp.zeros((16,), jnp.int32))
+    with pytest.raises(ValueError):
+        LouvainConfig(aggregation="bogus")
+    assert LouvainConfig().aggregation == "binned"
+    assert LouvainConfig(aggregation="sort").aggregation == "sort"
+
+
+@pytest.mark.parametrize("refine", [False, True])
+@pytest.mark.parametrize("pipeline_fused", [False, True])
+def test_e2e_binned_equals_sort(refine, pipeline_fused):
+    """Whole louvain/leiden runs under aggregation="binned" vs "sort" must
+    be indistinguishable: labels, Q, and every per-level history."""
+    from repro.core.louvain import LouvainConfig, louvain
+
+    u, v, w, _ = sbm(200, 5, p_in=0.3, p_out=0.03, seed=2)
+    g = from_numpy_edges(u, v, w)
+    cfg = LouvainConfig(refine=refine, pipeline_fused=pipeline_fused, seed=4)
+    rb = louvain(g, cfg)
+    rs = louvain(g, cfg.replace(aggregation="sort"))
+    np.testing.assert_array_equal(rb.labels, rs.labels)
+    assert rb.n_communities == rs.n_communities
+    assert rb.levels == rs.levels
+    assert rb.modularity == rs.modularity
+    assert rb.modularity_history == rs.modularity_history
+    assert rb.sweeps_per_level == rs.sweeps_per_level
+    assert rb.n_comm_per_level == rs.n_comm_per_level
+
+
+# ------------------------------------------------------------ compact
 
 
 @pytest.mark.parametrize("seed", [0, 1])

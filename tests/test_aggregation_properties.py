@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) pinning the sort-free binned
+aggregation to the one-sort oracle.
+
+Random directed multigraphs — duplicate/parallel edges, partial edge
+masks, junk labels on invalid slots, capacity padding — must coarsen
+BIT-FOR-BIT identically through ``remap_and_coarsen_binned`` and the
+``remap_and_coarsen`` oracle (DESIGN.md §Aggregation kernel), at every
+menu bin width and at every cascade stage capacity; whole louvain runs
+must be history-for-history indistinguishable between the two methods.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation
+from repro.core.louvain import auto_capacity_schedule
+from repro.graph.builders import from_numpy_edges
+from repro.graph.generators import sbm
+from repro.graph.structure import Graph
+from repro.kernels.common import STAGE_WIDTH_MENU
+
+# --- strategies ------------------------------------------------------------
+
+
+def _multigraph(rng, n, m, *, n_pad=0, m_pad=0, mask_p=0.85, weighted=True):
+    """A directed multigraph with duplicate-biased parallel edges, random
+    float weights, partial edge masks and capacity padding."""
+    n_max, m_max = n + n_pad, m + m_pad
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    dup = rng.random(m) < 0.5
+    if m > 1:
+        j = rng.integers(0, m, m)
+        src = np.where(dup, src[j], src)
+        dst = np.where(dup, dst[j], dst)
+    w = (rng.random(m).astype(np.float32) if weighted
+         else np.ones(m, np.float32))
+    em = np.zeros(m_max, bool)
+    em[:m] = rng.random(m) < mask_p
+    pad_i = np.full(m_pad, n_max, np.int32)
+    return Graph(
+        src=jnp.asarray(np.concatenate([src.astype(np.int32), pad_i])),
+        dst=jnp.asarray(np.concatenate([dst.astype(np.int32), pad_i])),
+        w=jnp.asarray(np.concatenate([w, np.zeros(m_pad, np.float32)])),
+        edge_mask=jnp.asarray(em),
+        n_valid=jnp.int32(n), m_valid=jnp.int32(m),
+        n_max=n_max, m_max=m_max, sorted_by=None)
+
+
+def _partition(rng, g, groups):
+    n, n_max = int(g.n_valid), g.n_max
+    return jnp.asarray(np.concatenate([
+        rng.integers(0, groups, n),
+        rng.integers(0, n_max, n_max - n),     # junk on invalid slots
+    ]), jnp.int32)
+
+
+@st.composite
+def multigraph_cases(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    n = draw(st.integers(4, 24))
+    m = draw(st.integers(n, 5 * n))
+    g = _multigraph(
+        rng, n, m,
+        n_pad=draw(st.sampled_from([0, 1, 7])),
+        m_pad=draw(st.sampled_from([0, 3, 17])),
+        mask_p=draw(st.sampled_from([0.5, 0.85, 1.0])),
+        weighted=draw(st.booleans()))
+    com = _partition(rng, g, groups=draw(st.integers(1, n)))
+    return g, com
+
+
+# --- coarse-graph parity -----------------------------------------------------
+
+
+def _assert_parity(g, com, **kw):
+    nc1, n1, cg1 = aggregation.remap_and_coarsen(g, com)
+    nc2, n2, cg2 = aggregation.remap_and_coarsen_binned(g, com, **kw)
+    np.testing.assert_array_equal(np.asarray(nc1), np.asarray(nc2))
+    assert int(n1) == int(n2)
+    for f in ("src", "dst", "w", "edge_mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(cg1, f)), np.asarray(getattr(cg2, f)),
+            err_msg=f)
+    assert int(cg1.n_valid) == int(cg2.n_valid)
+    assert int(cg1.m_valid) == int(cg2.m_valid)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_binned_equals_oracle_on_multigraphs(data):
+    g, com = data.draw(multigraph_cases())
+    width = data.draw(st.sampled_from((None,) + STAGE_WIDTH_MENU))
+    _assert_parity(g, com, width=width)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_binned_equals_oracle_at_every_cascade_capacity(data):
+    """The same valid contents, embedded at each capacity of a forced
+    multi-stage cascade schedule, coarsen identically under policy width."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+    n = data.draw(st.integers(4, 12))
+    m = data.draw(st.integers(n, 3 * n))
+    sched = auto_capacity_schedule(
+        256, 1024, min_n=0, n_floor=max(n, 8), m_floor=max(m, 32))
+    assert len(sched) > 1
+    groups = data.draw(st.integers(1, n))
+    for n_cap, m_cap in sched:
+        g = _multigraph(rng, n, m, n_pad=n_cap - n, m_pad=m_cap - m)
+        com = _partition(rng, g, groups=groups)
+        _assert_parity(g, com, width=None)
+
+
+# --- end-to-end parity -------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_e2e_binned_equals_sort(data):
+    """Whole louvain runs under aggregation="binned" vs "sort" must be
+    indistinguishable: labels, Q, and every per-level history."""
+    from repro.core.louvain import LouvainConfig, louvain
+
+    u, v, w, _ = sbm(
+        data.draw(st.sampled_from([60, 120])),
+        data.draw(st.sampled_from([3, 5])),
+        p_in=0.3, p_out=0.05, seed=data.draw(st.integers(0, 7)))
+    g = from_numpy_edges(u, v, w)
+    cfg = LouvainConfig(
+        refine=data.draw(st.booleans()),
+        pipeline_fused=data.draw(st.booleans()), seed=4)
+    rb = louvain(g, cfg)
+    rs = louvain(g, cfg.replace(aggregation="sort"))
+    np.testing.assert_array_equal(rb.labels, rs.labels)
+    assert rb.n_communities == rs.n_communities
+    assert rb.levels == rs.levels
+    assert rb.modularity == rs.modularity
+    assert rb.modularity_history == rs.modularity_history
+    assert rb.sweeps_per_level == rs.sweeps_per_level
+    assert rb.n_comm_per_level == rs.n_comm_per_level
