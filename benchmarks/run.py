@@ -415,12 +415,43 @@ ALL = {
 }
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
+    """Run the named benchmarks (all by default), crash-tolerantly.
+
+    One broken variant must not take down a whole (hours-long) sweep: each
+    benchmark runs under its own try/except, failures are recorded as
+    structured ``{"variant": ..., "error": ...}`` rows in the
+    ``BENCH_run_status`` artifact alongside the survivors' own artifacts,
+    and the exit code reports whether anything failed.
+    """
+    import traceback
+
     names = (argv or sys.argv[1:]) or list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}, want {list(ALL)}")
+    status = []
     for n in names:
         print(f"\n===== {n} =====")
-        ALL[n]()
+        try:
+            ALL[n]()
+            status.append({"variant": n, "ok": True, "error": None})
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            status.append({
+                "variant": n, "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(limit=20),
+            })
+            print(f"[run] {n} FAILED ({type(e).__name__}); continuing")
+    _save("BENCH_run_status", {"benchmarks": status})
+    failed = [s["variant"] for s in status if not s["ok"]]
+    print(f"\n[run] {len(status) - len(failed)}/{len(status)} benchmarks ok"
+          + (f"; failed: {failed}" if failed else ""))
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -192,9 +192,10 @@ def remap_and_coarsen(
     return new_com, n_comm, cg
 
 
-@partial(jax.jit, static_argnames=("width", "impl"))
+@partial(jax.jit, static_argnames=("width", "impl", "force_overflow"))
 def remap_and_coarsen_binned(
-    g: Graph, com: jax.Array, *, width: int | None = None, impl: str = "auto"
+    g: Graph, com: jax.Array, *, width: int | None = None, impl: str = "auto",
+    force_overflow: bool = False
 ) -> Tuple[jax.Array, jax.Array, Graph]:
     """Sort-free remap + coarsen (DESIGN.md §Aggregation kernel).
 
@@ -206,27 +207,39 @@ def remap_and_coarsen_binned(
     ``kernels.common.pick_bin_width`` menu pick (static at trace time).
 
     Returns ``(new_com, n_comm, coarse_graph)``.
+
+    ``force_overflow`` (static, part of the jit cache key) is the
+    ``binned_overflow`` fault-injection point — see
+    ``kernels.aggregation.binned_coarsen``.
     """
     new_com, n_comm = remap_communities(com, g.vertex_mask())
-    cg = binned_coarsen(g, new_com, n_comm, width=width, impl=impl)
+    cg = binned_coarsen(g, new_com, n_comm, width=width, impl=impl,
+                        force_overflow=force_overflow)
     return new_com, n_comm, cg
 
 
 def remap_and_coarsen_by(
-    method: str, g: Graph, com: jax.Array
+    method: str, g: Graph, com: jax.Array, faults=()
 ) -> Tuple[jax.Array, jax.Array, Graph]:
     """Dispatch one aggregation step by method name.
 
     ``"binned"`` (the default everywhere) runs the sort-free path;
     ``"sort"`` keeps the one-sort fused path selectable as the documented
     oracle (``LouvainConfig.aggregation``).
+
+    ``faults`` is the armed fault-point collection threaded down from the
+    driver (``utils.faultinject``): passing it explicitly (instead of
+    reading the global registry here, possibly mid-trace) keeps every
+    enclosing jit/lru_cache program keyed on the fault state, so a
+    clean-cached trace is never reused under faults or vice versa.
     """
     if method not in AGGREGATION_METHODS:
         raise ValueError(
             f"unknown aggregation {method!r}, want one of {AGGREGATION_METHODS}")
     if method == "sort":
         return remap_and_coarsen(g, com)
-    return remap_and_coarsen_binned(g, com)
+    return remap_and_coarsen_binned(
+        g, com, force_overflow="binned_overflow" in faults)
 
 
 def shrink_graph(g: Graph, n_max: int, m_max: int) -> Graph:

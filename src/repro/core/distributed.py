@@ -56,6 +56,8 @@ from repro.core.engine import (EngineSpec, make_distributed_phase,
 from repro.core.modularity import modularity
 from repro.graph.partition import EdgePartition, partition_edges_by_dst
 from repro.graph.structure import Graph
+from repro.utils import faultinject, telemetry
+from repro.utils.errors import RunReport, ShardError
 from repro.utils.timing import Timer
 
 
@@ -64,6 +66,37 @@ from repro.utils.timing import Timer
 
 def _flat_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(mesh.axis_names)
+
+
+def _engine_faults(faults: frozenset) -> tuple:
+    from repro.core.louvain import ENGINE_FAULTS
+
+    return tuple(sorted(f for f in faults if f in ENGINE_FAULTS))
+
+
+def _prepare_partition(g: Graph, n_devices: int) -> EdgePartition:
+    """Partition + the shard-coverage guard (DESIGN.md §Robustness).
+
+    The ``shard_drop`` fault-injection point masks out device 0's entire
+    edge shard after partitioning — modelling a lost/corrupted shard.  The
+    guard below re-counts the per-device masks against the graph's own
+    ``m_valid`` BEFORE any compute is dispatched: losing edges here would
+    otherwise just yield a quietly-worse partition (no crash, wrong
+    volumes), the canonical silent-corruption outcome.
+    """
+    part = partition_edges_by_dst(g, n_devices)
+    if faultinject.is_active("shard_drop"):
+        telemetry.bump("fault.shard_drop.injected")
+        emask = np.array(part.edge_mask)
+        emask[0, :] = False
+        part = dataclasses.replace(part, edge_mask=emask)
+    covered = int(np.asarray(part.edge_mask).sum())
+    expect = int(g.m_valid)
+    if covered != expect:
+        raise ShardError(
+            f"edge partition covers {covered} directed edges, graph has "
+            f"{expect}: a shard was dropped or corrupted")
+    return part
 
 
 def shard_edges(p: EdgePartition, mesh: Mesh):
@@ -88,7 +121,7 @@ def distributed_plp(
 ):
     """Driver: partition once, then one fused sharded phase call."""
     n = g.n_max
-    part = partition_edges_by_dst(g, mesh.devices.size)
+    part = _prepare_partition(g, mesh.devices.size)
     src, dst, w, emask = shard_edges(part, mesh)
     spec = EngineSpec(
         evaluator="plp",
@@ -100,6 +133,7 @@ def distributed_plp(
         # historical behavior of the sharded sweep: tie noise re-drawn per
         # iteration (the closest analogue of Chapel's racy move order)
         reshuffle_ties=True,
+        faults=_engine_faults(faultinject.active()),
     )
     phase = make_distributed_phase(mesh, n, spec)
 
@@ -127,12 +161,15 @@ class DistLouvainResult:
     timer: Timer
     sweeps_per_level: list = dataclasses.field(default_factory=list)
     n_comm_per_level: list = dataclasses.field(default_factory=list)
+    # retry/degradation/watchdog accounting (DESIGN.md §Robustness)
+    run_report: RunReport = dataclasses.field(default_factory=RunReport)
 
 
 @lru_cache(maxsize=None)
 def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
                               spec: EngineSpec, max_levels: int,
-                              agg_method: str = "binned"):
+                              agg_method: str = "binned",
+                              faults: frozenset = frozenset()):
     """Build the jitted whole-run distributed pipeline (DESIGN.md §Pipeline).
 
     The level loop runs INSIDE the shard_map worker, nested around the
@@ -198,7 +235,7 @@ def make_distributed_pipeline(mesh: Mesh, n: int, m_pad: int,
             collectively merged for the lockstep predicate (its local value
             already equals the pmax)."""
             new_com, n_comm, cg = aggregation.remap_and_coarsen_by(
-                agg_method, cur, com)
+                agg_method, cur, com, faults)
             n_comm = jax.lax.pmax(n_comm, axes)  # lockstep collective merge
             done = n_comm == cur.n_valid         # Alg. 3 l.6, on device
             macro = new_com[jnp.clip(assign, 0, n - 1)]
@@ -286,6 +323,8 @@ def distributed_louvain(
 ) -> DistLouvainResult:
     timer = Timer()
     n = g.n_max
+    faults = frozenset(faultinject.active())
+    report = RunReport(faults=sorted(faults))
     spec = EngineSpec(
         evaluator="louvain",
         backend="distributed",
@@ -293,14 +332,16 @@ def distributed_louvain(
         threshold=sweep_threshold,
         move_prob=move_prob,
         singleton_rule=singleton_rule,
+        faults=_engine_faults(faults),
     )
 
     if pipeline_fused:
         with timer.phase("partition"):
-            part = partition_edges_by_dst(g, mesh.devices.size)
+            part = _prepare_partition(g, mesh.devices.size)
             src, dst, w, emask = shard_edges(part, mesh)
         pipe = make_distributed_pipeline(mesh, n, part.m_pad, spec,
-                                         max_levels, aggregation_method)
+                                         max_levels, aggregation_method,
+                                         faults)
         with timer.phase("pipeline"):
             out = pipe(src, dst, w, emask, jnp.uint32(seed), g.n_valid)
             (final, n_final, levels, q, sweeps_hist,
@@ -314,6 +355,7 @@ def distributed_louvain(
             timer=timer,
             sweeps_per_level=[int(x) for x in sweeps_hist[:levels]],
             n_comm_per_level=[int(x) for x in ncomm_hist[:levels]],
+            run_report=report,
         )
 
     g0 = g
@@ -326,7 +368,9 @@ def distributed_louvain(
     phase = make_distributed_phase(mesh, n, spec)
     for level in range(max_levels):
         with timer.phase("partition"):
-            part = partition_edges_by_dst(cur, mesh.devices.size)
+            # the coverage guard applies per level: each re-partition is a
+            # fresh opportunity to lose a shard
+            part = _prepare_partition(cur, mesh.devices.size)
             src, dst, w, emask = shard_edges(part, mesh)
         com = jnp.arange(n, dtype=jnp.int32)
         need = cur.vertex_mask()
@@ -340,7 +384,7 @@ def distributed_louvain(
         sweeps_per_level.append(int(sweeps))
         with timer.phase("aggregation"):
             new_com, n_comm, coarse = aggregation.remap_and_coarsen_by(
-                aggregation_method, cur, com)
+                aggregation_method, cur, com, faults)
             n_comm_per_level.append(int(n_comm))
             done = int(n_comm) == int(cur.n_valid)
             if not done:
@@ -360,4 +404,5 @@ def distributed_louvain(
         timer=timer,
         sweeps_per_level=sweeps_per_level,
         n_comm_per_level=n_comm_per_level,
+        run_report=report,
     )

@@ -74,9 +74,16 @@ class EngineSpec(ConfigBase):
     # of this static width per level inside the trace (the cascade's coarse
     # levels, DESIGN.md §Pipeline).  0 = host-built DeviceEll required.
     ell_width: int = 0
+    # Armed fault-injection points relevant to the sweep trace (DESIGN.md
+    # §Robustness): "oscillation" pins the reported ΔN above the threshold,
+    # "vmem_starve" is read by the VMEM budget policy at trace time.  Part
+    # of the spec BECAUSE the spec is the jit/lru_cache key — fault state
+    # outside the key would let clean traces be reused under faults.
+    faults: tuple = ()
 
     def __post_init__(self):
         from repro.kernels.common import TABLE_MODES
+        from repro.utils.faultinject import FAULT_POINTS
 
         if self.evaluator not in EVALUATORS:
             raise ValueError(f"unknown evaluator {self.evaluator!r}")
@@ -84,6 +91,8 @@ class EngineSpec(ConfigBase):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.table_mode not in TABLE_MODES:
             raise ValueError(f"unknown table_mode {self.table_mode!r}")
+        if any(f not in FAULT_POINTS for f in self.faults):
+            raise ValueError(f"unknown fault point(s) in {self.faults!r}")
         if self.ell_width < 0:
             raise ValueError(f"ell_width must be >= 0, got {self.ell_width}")
         if self.ell_width > 0 and self.backend not in ("ell", "pallas"):
@@ -322,6 +331,14 @@ def make_step(spec: EngineSpec, g: Graph, ell, restrict):
         new_labels = jnp.where(adopt, proposal, labels)
         changed = adopt & (new_labels != labels)
         delta_n = jnp.sum(changed.astype(jnp.int32))
+        if "oscillation" in spec.faults:
+            # fault injection: the convergence signal never reports a
+            # fixpoint (two vertices trading labels forever, Lu &
+            # Halappanavar §4).  Labels and frontier are NOT perturbed —
+            # only the reported ΔN — so the phase runs to the max_sweeps
+            # watchdog bound and, at move_prob=1.0, returns bit-identical
+            # labels (a Jacobi fixpoint re-sweeps to itself).
+            delta_n = jnp.maximum(delta_n, jnp.int32(spec.threshold) + 1)
         if spec.use_frontier:
             next_active = neighbor_or_self_changed(g, changed)
         else:

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 from functools import lru_cache
 from typing import Optional, Tuple
 
@@ -54,8 +55,22 @@ from repro.core import aggregation
 from repro.core.engine import EngineSpec, SweepEngine, device_phase
 from repro.core.modularity import modularity
 from repro.graph.structure import Graph
-from repro.kernels.common import pick_ell_width
+from repro.kernels.common import accum_needs_promotion, pick_ell_width
+from repro.utils import faultinject, telemetry
+from repro.utils.errors import (CapacityError, CommunityDetectionError,
+                                KernelError, NumericError, RunReport)
 from repro.utils.timing import Timer
+
+# Fault-injection points that act inside the sweep trace and therefore ride
+# the EngineSpec (the jit cache key); the others act at the aggregation /
+# driver / ingest layers and are threaded separately (DESIGN.md §Robustness).
+ENGINE_FAULTS = ("oscillation", "vmem_starve")
+
+# Kernel-failure degradation ladder: on a non-taxonomy failure the driver
+# retries on the next-simpler backend — each step is bit-identical on clean
+# input by the kernel≡ell≡segment parity contracts, so descending can only
+# trade speed, never results.
+BACKEND_DESCENT = {"pallas": "ell", "ell": "segment"}
 
 
 # ------------------------------------------------------------ capacity schedule
@@ -192,10 +207,14 @@ class LouvainResult:
     # (n_cap, m_cap) of each cascade stage actually entered, in order; a
     # single entry means the schedule degenerated to one program
     cascade_stages: list = dataclasses.field(default_factory=list)
+    # what the hardened driver repaired / retried / degraded / flagged on
+    # the way here (DESIGN.md §Robustness); clean on the happy path
+    run_report: RunReport = dataclasses.field(default_factory=RunReport)
 
 
 def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
-                max_sweeps: Optional[int] = None) -> EngineSpec:
+                max_sweeps: Optional[int] = None,
+                faults: frozenset = frozenset()) -> EngineSpec:
     return EngineSpec(
         evaluator="louvain",
         backend=backend or cfg.backend,
@@ -205,6 +224,7 @@ def engine_spec(cfg: LouvainConfig, backend: Optional[str] = None,
         use_frontier=cfg.use_need_check,
         singleton_rule=cfg.singleton_rule,
         table_mode=cfg.table_mode,
+        faults=tuple(sorted(f for f in faults if f in ENGINE_FAULTS)),
     )
 
 
@@ -235,8 +255,8 @@ def _resolve_schedule(cfg: LouvainConfig, g: Graph) -> Tuple[Tuple[int, int], ..
     return tuple(caps)
 
 
-def _cascade_coarse_spec(cfg: LouvainConfig, cascade: bool,
-                         width: int) -> EngineSpec:
+def _cascade_coarse_spec(cfg: LouvainConfig, cascade: bool, width: int,
+                         faults: frozenset = frozenset()) -> EngineSpec:
     """Coarse-level engine spec for one stage.
 
     Inside a cascade the ``ell``/``pallas`` backends keep their fused
@@ -244,13 +264,15 @@ def _cascade_coarse_spec(cfg: LouvainConfig, cascade: bool,
     stage's static ``width``; outside (the parity oracle) the historical
     segment fallback applies."""
     if cascade and cfg.backend in ("ell", "pallas"):
-        return engine_spec(cfg).replace(ell_width=width)
-    return engine_spec(cfg, backend=_coarse_backend(cfg.backend))
+        return engine_spec(cfg, faults=faults).replace(ell_width=width)
+    return engine_spec(cfg, backend=_coarse_backend(cfg.backend),
+                       faults=faults)
 
 
-def _refine_spec(cfg: LouvainConfig) -> EngineSpec:
-    return engine_spec(cfg, backend="segment",
-                       max_sweeps=cfg.refine_sweeps).replace(threshold=0)
+def _refine_spec(cfg: LouvainConfig,
+                 faults: frozenset = frozenset()) -> EngineSpec:
+    return engine_spec(cfg, backend="segment", max_sweeps=cfg.refine_sweeps,
+                       faults=faults).replace(threshold=0)
 
 
 # ------------------------------------------------------------ transfer hooks
@@ -294,7 +316,8 @@ def _graph_arrays(g: Graph):
 def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
               refine_spec: Optional[EngineSpec], max_levels: int,
               track_modularity: bool, next_caps: Optional[Tuple[int, int]],
-              agg_method: str = "binned"):
+              agg_method: str = "binned",
+              faults: frozenset = frozenset(), promote: bool = False):
     """Build one jitted cascade stage (DESIGN.md §Pipeline).
 
     ``spec0 is not None`` marks stage 0: level 0 is peeled out of the loop
@@ -313,7 +336,16 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
     sentinel), ``sweeps/n_comm[max_levels]`` and
     ``delta_n[max_levels, max_sweeps]`` (``-1`` sentinel, the PR-1
     convention) — so the one bulk readback at the end reconstructs
-    ``LouvainResult`` unchanged regardless of how many stages ran.
+    ``LouvainResult`` unchanged regardless of how many stages ran.  The
+    fifth history element is the scalar non-finite-weight flag (numeric
+    guard rail): each level ORs in a finiteness check of its input graph,
+    and the driver refuses the answer (``NumericError``) if it comes back
+    set — it rides the same bulk readback, costing no extra transfer.
+
+    ``faults`` / ``promote`` are part of the lru_cache key ON PURPOSE: a
+    trace compiled clean must never be reused under injection (and vice
+    versa).  Clean runs always pass the defaults, so their cache behavior
+    is unchanged.
     """
 
     def stage(g: Graph, ell, g0: Graph, seed, assign, init_com, macro_in,
@@ -328,6 +360,17 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
             Mirrors one iteration of the per-level driver exactly; returns
             the next level's graph arrays + bookkeeping and this level's
             history entries."""
+            if "nan_weight" in faults:
+                # fault injection: poison one edge weight at level 1 (a
+                # coarse graph mid-pipeline, the hardest place to observe) —
+                # the guard below must flag it through the single readback
+                cur = dataclasses.replace(cur, w=cur.w.at[0].set(jnp.where(
+                    level_u32 == jnp.uint32(1), jnp.float32(jnp.nan),
+                    cur.w[0])))
+            # numeric guard rail: non-finite weights anywhere in the level
+            # loop poison sums silently (NaN gains → no proposals → a
+            # "converged" wrong answer), so every level checks its input
+            lvl_bad = jnp.any(cur.edge_mask & ~jnp.isfinite(cur.w))
             vmask = cur.vertex_mask()
             it0 = level_u32 * jnp.uint32(1000)
             com, _, sweeps, dn_h, _act_h = device_phase(
@@ -337,15 +380,15 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                 # §Pipeline sort-free invariant); "sort" selects the fused
                 # one-sort oracle — both bit-for-bit identical
                 new_com, n_comm, nxt = aggregation.remap_and_coarsen_by(
-                    agg_method, cur, com)
+                    agg_method, cur, com, faults)
             else:
                 # Leiden aggregates by the REFINED partition below; only the
                 # macro remap is needed here
                 new_com, n_comm = aggregation.remap_communities(com, vmask)
             macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
             done = n_comm == cur.n_valid           # Alg. 3 l.6 convergence
-            q = (modularity(g0, macro_assign) if track_modularity
-                 else jnp.float32(0.0))
+            q = (modularity(g0, macro_assign, promote=promote)
+                 if track_modularity else jnp.float32(0.0))
 
             def advance(_):
                 if refine_spec is not None:
@@ -356,7 +399,7 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                         refine_spec, cur, None, arange_n, vmask,
                         it0 + jnp.uint32(500), seed, restrict=com)
                     new_ref, n_ref, nxt_r = aggregation.remap_and_coarsen_by(
-                        agg_method, cur, ref)
+                        agg_method, cur, ref, faults)
                     # macro seed as the CONTIGUIZED macro id (all members of
                     # a refined group share it): values < n_comm stay valid
                     # under any later stage capacity, and the relabeling is
@@ -376,18 +419,20 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
             nxt_arrays, assign2, init2 = jax.lax.cond(done, stay, advance,
                                                       None)
             return (nxt_arrays, assign2, init2, macro_assign,
-                    sweeps.astype(jnp.int32), dn_h, n_comm, q, done)
+                    sweeps.astype(jnp.int32), dn_h, n_comm, q, done, lvl_bad)
 
-        mod_hist, sweeps_hist, ncomm_hist, dn_hist = hists
+        mod_hist, sweeps_hist, ncomm_hist, dn_hist, bad_w = hists
 
         if spec0 is not None:
             # peeled level 0: the only level that may use the host-built ELL
             (arrays, assign, init_com, macro, sweeps, dn_h, n_comm, q,
-             done) = run_level(g, assign, init_com, jnp.uint32(0), spec0, ell)
+             done, lvl_bad) = run_level(g, assign, init_com, jnp.uint32(0),
+                                        spec0, ell)
             mod_hist = mod_hist.at[0].set(q)
             sweeps_hist = sweeps_hist.at[0].set(sweeps)
             ncomm_hist = ncomm_hist.at[0].set(n_comm)
             dn_hist = dn_hist.at[0].set(dn_h)
+            bad_w = bad_w | lvl_bad
             level = jnp.int32(1)
         else:
             arrays = _graph_arrays(g)
@@ -408,7 +453,7 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
 
         def body(c):
             (level, _done, arrays, assign, init_com, _macro,
-             mh, sh, nh, dh) = c
+             mh, sh, nh, dh, bw) = c
             src, dst, w, em, nv, mv = arrays
             # coarsening output is src-sorted and front-compacted — the
             # invariant the traced ELL re-bucketing relies on
@@ -416,20 +461,21 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                         m_valid=mv, n_max=n, m_max=g.m_max,
                         sorted_by="src")
             (arrays2, assign2, init2, macro2, sweeps, dn_h, n_comm, q,
-             done2) = run_level(cur, assign, init_com,
-                                level.astype(jnp.uint32), spec_coarse, None)
+             done2, lvl_bad) = run_level(cur, assign, init_com,
+                                         level.astype(jnp.uint32),
+                                         spec_coarse, None)
             mh = mh.at[level].set(q)
             sh = sh.at[level].set(sweeps)
             nh = nh.at[level].set(n_comm)
             dh = dh.at[level].set(dn_h)
             return (level + 1, done2, arrays2, assign2, init2, macro2,
-                    mh, sh, nh, dh)
+                    mh, sh, nh, dh, bw | lvl_bad)
 
         carry = (level, done, arrays, assign, init_com, macro,
-                 mod_hist, sweeps_hist, ncomm_hist, dn_hist)
+                 mod_hist, sweeps_hist, ncomm_hist, dn_hist, bad_w)
         carry = jax.lax.while_loop(cond, body, carry)
         (level, done, arrays, assign, init_com, macro,
-         mod_hist, sweeps_hist, ncomm_hist, dn_hist) = carry
+         mod_hist, sweeps_hist, ncomm_hist, dn_hist, bad_w) = carry
 
         # stage-boundary stats for the host scheduler: live counts plus the
         # carried graph's max unweighted degree (next stage's width pick) —
@@ -445,7 +491,8 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
         def finalize(_):
             final_assign, n_final = aggregation.remap_communities(
                 macro, g0.vertex_mask())
-            return final_assign, n_final, modularity(g0, final_assign)
+            return (final_assign, n_final,
+                    modularity(g0, final_assign, promote=promote))
 
         if next_caps is None:
             final_assign, n_final, q_final = finalize(None)
@@ -459,7 +506,7 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                            jnp.float32(0.0)),
                 None)
         return (arrays, assign, init_com, macro,
-                (mod_hist, sweeps_hist, ncomm_hist, dn_hist),
+                (mod_hist, sweeps_hist, ncomm_hist, dn_hist, bad_w),
                 level, done, nv, mv, max_deg,
                 final_assign, n_final, q_final)
 
@@ -482,7 +529,9 @@ def _shrink_fn(n_in: int, m_in: int, n_out: int, m_out: int):
 
 
 def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
-                      g_original: Optional[Graph]) -> LouvainResult:
+                      g_original: Optional[Graph],
+                      faults: frozenset = frozenset(),
+                      promote: bool = False) -> LouvainResult:
     """Whole-run fused driver: a cascade of at most ``len(schedule)`` stage
     dispatches with ONE bulk readback (``_readback``) at the end and one
     5-scalar ``_stage_sync`` per stage boundary.  A degenerate schedule
@@ -492,8 +541,8 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
     g0 = g_original if g_original is not None else g
     caps = _resolve_schedule(cfg, g)
     cascade = len(caps) > 1
-    spec0 = engine_spec(cfg)
-    refine_spec = _refine_spec(cfg) if cfg.refine else None
+    spec0 = engine_spec(cfg, faults=faults)
+    refine_spec = _refine_spec(cfg, faults) if cfg.refine else None
 
     ell = None
     if cfg.backend in ("ell", "pallas"):
@@ -507,7 +556,8 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
     hists = (jnp.full((cfg.max_levels,), jnp.nan, jnp.float32),
              jnp.full((cfg.max_levels,), -1, jnp.int32),
              jnp.full((cfg.max_levels,), -1, jnp.int32),
-             jnp.full((cfg.max_levels, cfg.max_sweeps), -1, jnp.int32))
+             jnp.full((cfg.max_levels, cfg.max_sweeps), -1, jnp.int32),
+             jnp.bool_(False))
     seed_a = jnp.uint32(cfg.seed)
     stages: list = []
 
@@ -519,10 +569,10 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
         level = jnp.int32(0)
         while True:
             fn = _stage_fn(spec0 if k == 0 else None,
-                           _cascade_coarse_spec(cfg, cascade, width),
+                           _cascade_coarse_spec(cfg, cascade, width, faults),
                            refine_spec, cfg.max_levels, cfg.track_modularity,
                            caps[k + 1] if k + 1 < len(caps) else None,
-                           cfg.aggregation)
+                           cfg.aggregation, faults, promote)
             (arrays, assign, init_com, macro, hists, level, done, nv, mv,
              max_deg, final_assign, n_final, q_final) = fn(
                 g_k, ell_k, g0, seed_a, assign, init_com, macro, level,
@@ -543,8 +593,10 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
             if k2 == k:
                 # unreachable by the loop-exit predicate (it only exits on
                 # done / budget / fits-next); a silent break here would
-                # return the intermediate stage's skipped final outputs
-                raise RuntimeError(
+                # return the intermediate stage's skipped final outputs.
+                # Typed so the degradation ladder can retry the run on the
+                # single-capacity (schedule="none") program.
+                raise CapacityError(
                     "cascade invariant violated: stage exited without "
                     f"done/budget and ({nv_h}, {mv_h}) fits no capacity in "
                     f"{caps[k + 1:]}")
@@ -555,8 +607,13 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
 
         out = _readback((final_assign, n_final, level, q_final) + hists)
     (final_assign, n_final, levels, q, mod_hist, sweeps_hist, ncomm_hist,
-     dn_hist) = out
+     dn_hist, bad_w) = out
 
+    if bool(bad_w):
+        # the guard-rail flag from the level loop (rode the one readback):
+        # refuse the answer rather than return a silently-poisoned partition
+        raise NumericError(
+            "non-finite edge weight detected inside the fused level loop")
     levels = int(levels)
     sweeps_per_level = [int(s) for s in sweeps_hist[:levels]]
     return LouvainResult(
@@ -581,11 +638,12 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
 
 
 def _refine_partition(cur: Graph, com_macro: jax.Array, cfg: LouvainConfig,
-                      level: int) -> jax.Array:
+                      level: int,
+                      faults: frozenset = frozenset()) -> jax.Array:
     """Leiden refinement: greedy modularity merges restricted to the macro
     communities, starting from singletons.  Guarantees every aggregated
     super-vertex is contained in (and connected within) a macro community."""
-    engine = SweepEngine(cur, _refine_spec(cfg))
+    engine = SweepEngine(cur, _refine_spec(cfg, faults))
     res = engine.run_phase(
         *engine.singleton_state(),
         it0=level * 1000 + 500, seed=cfg.seed,
@@ -603,11 +661,90 @@ def leiden(g: Graph, cfg: LouvainConfig = LouvainConfig(),
     return louvain(g, cfg.replace(refine=True), g_original)
 
 
+def _trivial_result(report: RunReport) -> LouvainResult:
+    """Degenerate zero-capacity graph: nothing to cluster, nothing to run."""
+    return LouvainResult(
+        labels=np.zeros((0,), np.int32), n_communities=0, levels=0,
+        modularity=0.0, modularity_history=[], sweeps_per_level=[],
+        timer=Timer(), run_report=report)
+
+
+def _finalize_report(res: LouvainResult, cfg: LouvainConfig,
+                     report: RunReport) -> LouvainResult:
+    """Watchdog accounting + the final numeric gate, after any ladder."""
+    for i, s in enumerate(res.sweeps_per_level):
+        if s >= cfg.max_sweeps:
+            report.warnings.append(f"watchdog:max_sweeps:level{i}")
+    if res.levels >= cfg.max_levels:
+        report.warnings.append("watchdog:max_levels")
+    res.run_report = report
+    if not math.isfinite(res.modularity):
+        raise NumericError(
+            f"non-finite final modularity {res.modularity!r}", report=report)
+    return res
+
+
 def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(),
             g_original: Optional[Graph] = None) -> LouvainResult:
-    if cfg.pipeline_fused and cfg.fused:
-        return _louvain_pipeline(g, cfg, g_original)
-    return _louvain_per_level(g, cfg, g_original)
+    """Hardened driver (DESIGN.md §Robustness): runs the fused pipeline or
+    the per-level driver under a bounded retry/degradation ladder —
+
+      * capacity bust (``CapacityError``) → ONE retry on the
+        single-capacity ``capacity_schedule="none"`` program;
+      * non-taxonomy backend failure → descend ``pallas → ell → segment``
+        (each step bit-identical on clean input by the parity contracts);
+      * typed taxonomy errors (numeric, validation, …) propagate — they
+        mean the ANSWER is unsafe, so no amount of retrying helps;
+
+    everything attempted is recorded in ``result.run_report``.  The clean
+    path runs exactly one attempt with default fault/promotion state, so
+    its traces, transfer counts and results are unchanged."""
+    report = RunReport(faults=sorted(faultinject.active()))
+    if g.n_max == 0:
+        return _trivial_result(report)
+    faults = frozenset(faultinject.active())
+    promote = accum_needs_promotion(g.m_max)
+    if promote:
+        report.warnings.append("precision:f32_accum_risk"
+                               if not jax.config.jax_enable_x64
+                               else "precision:promoted_f64")
+    cfg_try = cfg
+    while True:
+        try:
+            if cfg_try.pipeline_fused and cfg_try.fused:
+                res = _louvain_pipeline(g, cfg_try, g_original, faults,
+                                        promote)
+            else:
+                res = _louvain_per_level(g, cfg_try, g_original, faults,
+                                         promote)
+            break
+        except CapacityError as err:
+            if cfg_try.capacity_schedule == "none":
+                err.report = report
+                raise
+            telemetry.bump("ladder.capacity_retry")
+            report.retries.append({
+                "kind": "capacity",
+                "from": repr(cfg_try.capacity_schedule), "to": "none",
+                "error": str(err)})
+            cfg_try = cfg_try.replace(capacity_schedule="none")
+        except CommunityDetectionError as err:
+            err.report = report
+            raise
+        except Exception as err:  # noqa: BLE001 — the backend-descent rung
+            nxt = BACKEND_DESCENT.get(cfg_try.backend)
+            if nxt is None:
+                raise KernelError(
+                    f"backend {cfg_try.backend!r} failed with no descent "
+                    f"left: {type(err).__name__}: {err}",
+                    report=report) from err
+            telemetry.bump("ladder.backend_descent")
+            report.degradations.append({
+                "kind": "backend_descent",
+                "from": cfg_try.backend, "to": nxt,
+                "error": f"{type(err).__name__}: {err}"})
+            cfg_try = cfg_try.replace(backend=nxt)
+    return _finalize_report(res, cfg_try, report)
 
 
 def _tphase(timer: Timer, name: str, level: int, per_level: bool):
@@ -621,7 +758,9 @@ def _tphase(timer: Timer, name: str, level: int, per_level: bool):
 
 
 def _louvain_per_level(g: Graph, cfg: LouvainConfig,
-                       g_original: Optional[Graph]) -> LouvainResult:
+                       g_original: Optional[Graph],
+                       faults: frozenset = frozenset(),
+                       promote: bool = False) -> LouvainResult:
     """Per-level Python driver (``pipeline_fused=False``): one fused
     local-moving dispatch per level, aggregation + Alg. 3 convergence on
     host.  Bit-for-bit parity with the fused pipeline is contractual
@@ -643,7 +782,16 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
     for level in range(cfg.max_levels):
         spec = engine_spec(
             cfg, backend=cfg.backend if level == 0
-            else _coarse_backend(cfg.backend))
+            else _coarse_backend(cfg.backend), faults=faults)
+        if "nan_weight" in faults and level == 1:
+            # fault injection: same poison as the fused pipeline's
+            cur = dataclasses.replace(
+                cur, w=cur.w.at[0].set(jnp.float32(jnp.nan)))
+        # numeric guard rail, mirroring the fused pipeline's per-level
+        # check (host-side here: this driver already syncs every level)
+        if bool(jnp.any(cur.edge_mask & ~jnp.isfinite(cur.w))):
+            raise NumericError(
+                f"non-finite edge weight detected at level {level}")
         with timer.phase("ell_build") if spec.backend in ("ell", "pallas") \
                 else contextlib.nullcontext():
             engine = SweepEngine(cur, spec)
@@ -670,7 +818,7 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
                     com, cur.vertex_mask())
             else:
                 new_com, n_comm, coarse = aggregation.remap_and_coarsen_by(
-                    cfg.aggregation, cur, com)
+                    cfg.aggregation, cur, com, faults)
             # macro labels on ORIGINAL vertices (the result partition); under
             # refinement `assign` tracks the finer refined chain instead
             macro_assign = new_com[jnp.clip(assign, 0, n - 1)]
@@ -682,9 +830,9 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
                 # Leiden: aggregate by the REFINED partition; seed the next
                 # level's local-moving with each super-vertex's macro id
                 with _tphase(timer, "refinement", level, cfg.per_level_timing):
-                    ref = _refine_partition(cur, com, cfg, level)
+                    ref = _refine_partition(cur, com, cfg, level, faults)
                 new_ref, n_ref, coarse = aggregation.remap_and_coarsen_by(
-                    cfg.aggregation, cur, ref)
+                    cfg.aggregation, cur, ref, faults)
                 # contiguized macro label of each refined group (refined ⊆
                 # macro; monotone relabeling — see _stage_fn.run_level)
                 macro_of_ref = jax.ops.segment_max(
@@ -698,13 +846,14 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
                 cur = coarse
         levels = level + 1
         if cfg.track_modularity:
-            mod_hist.append(float(modularity(g0, macro_assign)))
+            mod_hist.append(float(modularity(g0, macro_assign,
+                                             promote=promote)))
         if done:
             break
 
     final_assign, n_final = aggregation.remap_communities(
         macro_assign, g0.vertex_mask())
-    q = float(modularity(g0, final_assign))
+    q = float(modularity(g0, final_assign, promote=promote))
     return LouvainResult(
         labels=np.asarray(final_assign),
         n_communities=int(n_final),

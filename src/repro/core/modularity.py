@@ -47,12 +47,35 @@ def intra_weight(g: Graph, com: jax.Array) -> jax.Array:
     return jnp.sum(jnp.where(g.edge_mask & same, g.w, 0.0))
 
 
-def modularity(g: Graph, com: jax.Array) -> jax.Array:
-    """Newman–Girvan modularity of the partition ``com`` (f32 scalar)."""
-    vol_v = g.total_volume()
-    w_in = intra_weight(g, com)
-    vol_c = community_volumes(g, com)
-    return w_in / vol_v - jnp.sum((vol_c / vol_v) ** 2)
+def modularity(g: Graph, com: jax.Array, *, promote: bool = False) -> jax.Array:
+    """Newman–Girvan modularity of the partition ``com`` (f32 scalar).
+
+    Guard rails (DESIGN.md §Robustness):
+    * an edgeless graph (vol = 0) returns Q = 0 instead of 0/0 = NaN; for
+      vol > 0 the guarded expression is bitwise identical to the unguarded
+      one (same divisions, selected verbatim);
+    * ``promote=True`` (the drivers set it via ``accum_needs_promotion``
+      when m·max-weight approaches float32 precision loss) accumulates the
+      volume/intra sums in float64 when x64 is enabled — otherwise it stays
+      f32 and ``accum_dtype`` records the risk for the RunReport.
+    """
+    from repro.kernels.common import accum_dtype
+
+    acc = accum_dtype(promote)
+    if acc == jnp.float32:
+        vol_v = g.total_volume()
+        w_in = intra_weight(g, com)
+        vol_c = community_volumes(g, com)
+    else:
+        wm = jnp.where(g.edge_mask, g.w, 0.0).astype(acc)
+        vol_v = jnp.sum(wm)
+        same = com[g.src] == com[g.dst]
+        w_in = jnp.sum(jnp.where(same, wm, jnp.zeros((), acc)))
+        deg = jax.ops.segment_sum(wm, g.src, num_segments=g.n_max)
+        vol_c = jax.ops.segment_sum(deg, com, num_segments=g.n_max)
+    safe = jnp.where(vol_v > 0, vol_v, jnp.ones((), vol_v.dtype))
+    q = w_in / safe - jnp.sum((vol_c / safe) ** 2)
+    return jnp.where(vol_v > 0, q, jnp.zeros((), q.dtype)).astype(jnp.float32)
 
 
 def delta_q_from_score(score: jax.Array, vol_v: jax.Array) -> jax.Array:

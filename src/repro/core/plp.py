@@ -27,6 +27,9 @@ import numpy as np
 from repro.config import ConfigBase
 from repro.core.engine import EngineSpec, SweepEngine
 from repro.graph.structure import Graph
+from repro.utils import faultinject, telemetry
+from repro.utils.errors import (CommunityDetectionError, KernelError,
+                                RunReport)
 from repro.utils.timing import Timer
 
 
@@ -56,9 +59,14 @@ class PLPResult:
     delta_n_history: list
     active_history: list
     timer: Timer
+    # retry/degradation/watchdog accounting (DESIGN.md §Robustness)
+    run_report: RunReport = dataclasses.field(default_factory=RunReport)
 
 
-def engine_spec(cfg: PLPConfig) -> EngineSpec:
+def engine_spec(cfg: PLPConfig,
+                faults: frozenset = frozenset()) -> EngineSpec:
+    from repro.core.louvain import ENGINE_FAULTS
+
     return EngineSpec(
         evaluator="plp",
         backend=cfg.backend,
@@ -69,15 +77,16 @@ def engine_spec(cfg: PLPConfig) -> EngineSpec:
         use_frontier=cfg.use_frontier,
         reshuffle_ties=cfg.reshuffle_ties,
         table_mode=cfg.table_mode,
+        faults=tuple(sorted(f for f in faults if f in ENGINE_FAULTS)),
     )
 
 
-def plp(g: Graph, cfg: PLPConfig = PLPConfig(), ell_graph=None) -> PLPResult:
-    """Run Parallel Label Propagation; returns final labels + history."""
+def _plp_once(g: Graph, cfg: PLPConfig, ell_graph,
+              faults: frozenset) -> PLPResult:
     timer = Timer()
     with timer.phase("ell_build") if cfg.backend in ("ell", "pallas") \
             else contextlib.nullcontext():
-        engine = SweepEngine(g, engine_spec(cfg), ell=ell_graph)
+        engine = SweepEngine(g, engine_spec(cfg, faults), ell=ell_graph)
 
     labels, active = engine.singleton_state()
     with timer.phase("move"):
@@ -89,3 +98,47 @@ def plp(g: Graph, cfg: PLPConfig = PLPConfig(), ell_graph=None) -> PLPResult:
         active_history=res.active_history,
         timer=timer,
     )
+
+
+def plp(g: Graph, cfg: PLPConfig = PLPConfig(), ell_graph=None) -> PLPResult:
+    """Run Parallel Label Propagation; returns final labels + history.
+
+    Hardened like ``core.louvain.louvain``: non-taxonomy backend failures
+    descend the ``pallas → ell → segment`` ladder (bit-identical on clean
+    input), iteration-budget exhaustion is flagged as a watchdog warning,
+    and everything attempted lands in ``result.run_report``."""
+    from repro.core.louvain import BACKEND_DESCENT
+
+    report = RunReport(faults=sorted(faultinject.active()))
+    if g.n_max == 0:
+        return PLPResult(labels=np.zeros((0,), np.int32), iterations=0,
+                         delta_n_history=[], active_history=[], timer=Timer(),
+                         run_report=report)
+    faults = frozenset(faultinject.active())
+    cfg_try = cfg
+    while True:
+        try:
+            res = _plp_once(g, cfg_try, ell_graph, faults)
+            break
+        except CommunityDetectionError as err:
+            err.report = report
+            raise
+        except Exception as err:  # noqa: BLE001 — the backend-descent rung
+            nxt = BACKEND_DESCENT.get(cfg_try.backend)
+            if nxt is None:
+                raise KernelError(
+                    f"backend {cfg_try.backend!r} failed with no descent "
+                    f"left: {type(err).__name__}: {err}",
+                    report=report) from err
+            telemetry.bump("ladder.backend_descent")
+            report.degradations.append({
+                "kind": "backend_descent",
+                "from": cfg_try.backend, "to": nxt,
+                "error": f"{type(err).__name__}: {err}"})
+            # a descended run no longer uses the caller's ELL layout
+            ell_graph = None
+            cfg_try = cfg_try.replace(backend=nxt)
+    if res.iterations >= cfg_try.max_iterations:
+        report.warnings.append("watchdog:max_iterations")
+    res.run_report = report
+    return res

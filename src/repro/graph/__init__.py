@@ -9,8 +9,11 @@ from repro.graph.segment import (
     segment_argmax,
 )
 from repro.graph.builders import (
+    RepairReport,
+    canonicalize_edges,
     from_undirected_edges,
     from_numpy_edges,
+    from_numpy_edges_robust,
     validate_graph,
 )
 from repro.graph import generators, datasets, partition, ell
@@ -18,8 +21,11 @@ from repro.graph import generators, datasets, partition, ell
 __all__ = [
     "Graph",
     "graph_from_arrays",
+    "RepairReport",
+    "canonicalize_edges",
     "from_undirected_edges",
     "from_numpy_edges",
+    "from_numpy_edges_robust",
     "validate_graph",
     "sort_by_keys",
     "run_starts",

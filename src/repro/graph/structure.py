@@ -126,10 +126,21 @@ def graph_from_arrays(
     m_max: Optional[int] = None,
     n_valid: Optional[int] = None,
     sorted_by: Optional[str] = None,
+    validate: Optional[bool] = None,
 ) -> Graph:
-    """Wrap already-symmetrized directed edge arrays, padding to capacity."""
+    """Wrap already-symmetrized directed edge arrays, padding to capacity.
+
+    ``validate`` runs the STRUCTURAL half of ``builders.validate_graph``
+    (mask counts, id ranges, weight finiteness, sort invariant) on the
+    result; symmetry is deliberately not enforced here because callers hand
+    this function deliberately one-sided intermediates.  None defers to
+    ``builders.DEFAULT_VALIDATE`` (flipped on by the test conftest).
+    """
     m = src.shape[0]
-    m_max = m_max or m
+    # floor the edge capacity at 1: an edgeless graph keeps one fully-masked
+    # padding slot so every kernel's static-shape assumption (m_max >= 1,
+    # e.g. the GroupBy's (m-1,) run-start buffer) holds on degenerate input
+    m_max = m_max or max(m, 1)
     if m_max < m:
         raise ValueError(f"m_max={m_max} < m={m}")
     pad = m_max - m
@@ -138,7 +149,7 @@ def graph_from_arrays(
     dst = jnp.concatenate([dst.astype(jnp.int32), jnp.full((pad,), sentinel)])
     w = jnp.concatenate([w.astype(jnp.float32), jnp.zeros((pad,), jnp.float32)])
     edge_mask = jnp.arange(m_max) < m
-    return Graph(
+    g = Graph(
         src=src,
         dst=dst,
         w=w,
@@ -149,3 +160,7 @@ def graph_from_arrays(
         m_max=int(m_max),
         sorted_by=sorted_by,
     )
+    from repro.graph import builders  # late: builders imports this module
+    if builders.DEFAULT_VALIDATE if validate is None else validate:
+        builders.validate_graph(g, symmetry=False)
+    return g

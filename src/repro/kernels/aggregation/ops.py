@@ -41,6 +41,7 @@ from repro.kernels.aggregation.kernel import bin_rank_pallas
 from repro.kernels.aggregation.ref import bin_rank_ref
 from repro.kernels.common import (bin_table_bytes, hash_u32_jnp,
                                   pick_bin_width, resolve_bin_impl)
+from repro.utils import telemetry
 
 
 def community_edge_keys(
@@ -119,6 +120,7 @@ def binned_coarsen(
     max_rounds: Optional[int] = None,
     row_block: Optional[int] = None,
     vmem_budget: Optional[int] = None,
+    force_overflow: bool = False,
 ) -> Graph:
     """Sort-free coarse graph for CONTIGUOUS community ids ``new_com``.
 
@@ -126,6 +128,11 @@ def binned_coarsen(
     ``remap_and_coarsen``'s coarse output (tests/test_aggregation.py); the
     one-sort path remains reachable as the in-graph ``lax.cond`` fallback
     AND as the documented oracle (``LouvainConfig.aggregation="sort"``).
+
+    ``force_overflow`` (static; the ``binned_overflow`` fault-injection
+    point) pins the overflow predicate true so every aggregation takes the
+    sort fallback — the bit-identity of that descent is what
+    tests/test_faults.py asserts.
     """
     n, m = g.n_max, g.m_max
     W = width if width is not None else pick_bin_width(n, m)
@@ -137,6 +144,9 @@ def binned_coarsen(
     cs, cd = community_edge_keys(g, new_com)
     keys, _resolved, overflow, _rounds = insert_bins(
         g, cs, cd, width=W, max_rounds=max_rounds)
+    if force_overflow:
+        telemetry.bump("fault.binned_overflow.forced")
+        overflow = jnp.bool_(True)
 
     def binned_path(_):
         keys_flat = keys[:-1]
@@ -167,6 +177,11 @@ def binned_coarsen(
                                jnp.int32).at[epos].set(cs * base + cd)[:m])
             gsrc, gdst = packed // base, packed % base
         else:
+            # overflow guard: (n_cap+1)² would not fit int32, so the packed
+            # single-scatter id encoding is statically disabled for this
+            # capacity; the counter makes the (slower) two-scatter descent
+            # observable rather than silent
+            telemetry.bump("agg.id_pack_disabled")
             gsrc = (jnp.full((m + 1,), sentinel, jnp.int32)
                     .at[epos].set(cs)[:m])
             gdst = (jnp.full((m + 1,), sentinel, jnp.int32)

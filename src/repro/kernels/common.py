@@ -6,11 +6,19 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.utils import faultinject, telemetry
+
 # Default per-core VMEM capacity assumed by the budget policy (~16 MB/core on
 # contemporary TPUs).  Override per TPU generation with the
 # REPRO_VMEM_BUDGET_BYTES environment variable or the ``budget_bytes`` kwargs.
 DEFAULT_VMEM_BUDGET_BYTES = 16 << 20
 VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET_BYTES"
+
+# Largest integer float32 accumulates exactly (24-bit mantissa).  Volume /
+# modularity sums approach this once m_valid · max-weight nears it: every
+# add past 2^24 can round away an entire unit-weight edge, silently biasing
+# Q at com-orkut scale (117M directed edges, Table I).
+F32_ACCUM_SAFE = 1 << 24
 
 TABLE_MODES = ("auto", "resident", "streamed")
 
@@ -37,9 +45,43 @@ def vmem_budget_bytes(budget_bytes: int | None = None) -> int:
     decision and row-block sizing are static per compiled program.
     """
     if budget_bytes is not None:
-        return int(budget_bytes)
-    env = os.environ.get(VMEM_BUDGET_ENV)
-    return int(env) if env else DEFAULT_VMEM_BUDGET_BYTES
+        b = int(budget_bytes)
+    else:
+        env = os.environ.get(VMEM_BUDGET_ENV)
+        b = int(env) if env else DEFAULT_VMEM_BUDGET_BYTES
+    if faultinject.is_active("vmem_starve"):
+        # fault injection: collapse the budget so every capacity-adaptive
+        # policy (resident/streamed tables, kernel/ref bin rank) lands in
+        # its fallback regime — those regimes are bit-identical by the
+        # parity contracts, which is exactly what tests/test_faults.py
+        # asserts.  Callers arming this fault key their traces on it
+        # (EngineSpec.faults), so a clean-cached trace is never reused.
+        telemetry.bump("fault.vmem_starve.budget_clamped")
+        b = min(b, 1024)
+    return b
+
+
+def accum_needs_promotion(m_cap: int, w_max: float = 1.0) -> bool:
+    """Trace-time predicate for the volume/modularity precision guard:
+    True when ``m_cap`` edge weights of magnitude ``w_max`` could sum past
+    float32's exact-integer range.  Uses the static edge CAPACITY (an upper
+    bound on m_valid), so the decision needs no device sync and is part of
+    the compiled program's cache key."""
+    return float(m_cap) * max(float(w_max), 1.0) >= float(F32_ACCUM_SAFE)
+
+
+def accum_dtype(promote: bool):
+    """Accumulator dtype for volume/modularity sums.
+
+    float64 only when promotion is requested AND x64 is enabled; otherwise
+    float32 with a telemetry bump (``numeric.f32_accum_risk``) so the risk
+    is observable — the drivers surface it as a ``RunReport`` warning."""
+    if not promote:
+        return jnp.float32
+    if jax.config.jax_enable_x64:
+        return jnp.float64
+    telemetry.bump("numeric.f32_accum_risk")
+    return jnp.float32
 
 
 def pick_row_block(width: int, budget_elems: int = 1 << 21,

@@ -1,0 +1,102 @@
+"""Typed failure taxonomy + run reporting for the hardened execution layer.
+
+DESIGN.md §Robustness: every way a community-detection run can go wrong maps
+to exactly one exception type below, and every run carries a ``RunReport``
+describing what (if anything) was repaired, retried, or degraded on the way
+to the result.  The contract enforced by ``tests/test_faults.py``: a fault
+either lands on a fallback path whose result is bit-identical to the clean
+oracle, or raises one of these types with a populated report — never a
+silent wrong answer.
+
+Kept in ``utils`` so every layer (graph builders, kernels, core drivers,
+benchmarks) can import the taxonomy without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What happened on the way to a result (attached to ``LouvainResult`` /
+    ``PLPResult`` / ``DistLouvainResult`` as ``run_report``).
+
+    * ``repairs``       — the ingest ``RepairReport`` (or None if the graph
+                          came in through a non-robust entry point)
+    * ``retries``       — capacity-tier retries, as
+                          ``{"kind": "capacity", "from": ..., "to": ...}``
+    * ``degradations``  — backend descents, as ``{"kind": "backend_descent",
+                          "from": "pallas", "to": "ell", "error": ...}``
+    * ``warnings``      — bounded-but-suspicious outcomes, e.g.
+                          ``"watchdog:max_sweeps:level3"``,
+                          ``"precision:f32_accum_risk"``
+    * ``faults``        — fault-injection points active during the run
+                          (``utils.faultinject``); empty in production
+    """
+
+    repairs: Optional[Any] = None
+    retries: list = dataclasses.field(default_factory=list)
+    degradations: list = dataclasses.field(default_factory=list)
+    warnings: list = dataclasses.field(default_factory=list)
+    faults: list = dataclasses.field(default_factory=list)
+
+    @property
+    def clean(self) -> bool:
+        """True iff nothing was repaired, retried, degraded, or flagged."""
+        return (not self.retries and not self.degradations
+                and not self.warnings
+                and (self.repairs is None or getattr(self.repairs, "clean", True)))
+
+    def as_dict(self) -> dict:
+        return {
+            "repairs": (dataclasses.asdict(self.repairs)
+                        if dataclasses.is_dataclass(self.repairs)
+                        else self.repairs),
+            "retries": list(self.retries),
+            "degradations": list(self.degradations),
+            "warnings": list(self.warnings),
+            "faults": list(self.faults),
+        }
+
+
+class CommunityDetectionError(Exception):
+    """Base of the typed failure taxonomy (DESIGN.md §Robustness).
+
+    ``report`` carries the RunReport of the failed run so callers see what
+    the degradation ladder already tried before giving up.
+    """
+
+    def __init__(self, message: str, report: Optional[RunReport] = None):
+        super().__init__(message)
+        self.report = report if report is not None else RunReport()
+
+
+class InputValidationError(CommunityDetectionError):
+    """Malformed input graph: asymmetric edges, out-of-range or negative
+    endpoint ids, non-finite or negative weights, mask/count mismatches."""
+
+
+class CapacityError(CommunityDetectionError):
+    """A static capacity was busted (graph does not fit a stage capacity, or
+    the cascade's fits-next-capacity invariant was violated)."""
+
+
+class KernelError(CommunityDetectionError):
+    """A compute backend failed (Pallas kernel compile/dispatch failure) and
+    the backend-descent ladder is exhausted."""
+
+
+class ConvergenceError(CommunityDetectionError):
+    """Local-moving or the level loop failed to converge within the watchdog
+    bounds AND the caller asked for strict convergence."""
+
+
+class NumericError(CommunityDetectionError):
+    """Non-finite values reached a result accumulator (NaN/Inf modularity,
+    volume overflow) — the numeric guard rails refused the answer."""
+
+
+class ShardError(CommunityDetectionError):
+    """The distributed edge partition lost coverage (a dropped or corrupted
+    shard): the per-shard edge counts no longer cover the graph."""

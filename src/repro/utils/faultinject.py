@@ -1,0 +1,101 @@
+"""Deterministic, env/config-gated fault injection for the robustness suite.
+
+Each name in ``FAULT_POINTS`` is a site in the production code that, when
+armed, deterministically perturbs the run in a way a real deployment could
+encounter (DESIGN.md §Robustness):
+
+* ``nan_weight``       — a NaN edge weight appears mid-pipeline (level 1),
+                         modelling corrupt upstream data / a bad reduction.
+* ``binned_overflow``  — the binned-aggregation overflow predicate is forced
+                         true, modelling a hub row busting the bin width.
+* ``oscillation``      — the local-move convergence signal never reports a
+                         fixpoint, modelling two vertices trading labels
+                         forever (Lu & Halappanavar, arXiv:1410.1237 §4).
+* ``vmem_starve``      — the VMEM budget collapses to ~1KB, forcing every
+                         capacity-adaptive kernel into its streamed/ref
+                         regime.
+* ``shard_drop``       — one device's edge shard is zeroed after
+                         partitioning, modelling a lost worker.
+
+Arming is HOST-side only and must be captured at trace time: every
+``lru_cache``/``jit`` program builder that contains an injection site takes
+the active-fault frozenset as part of its cache key, so a clean-cached trace
+is never reused under faults (and vice versa).  Production runs never pay
+for the machinery — sites compile to nothing when their fault is off.
+
+Gates: the ``REPRO_FAULTS`` env var (comma-separated names, read at import)
+or the ``inject()`` context manager / ``arm()``+``disarm()`` pair in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import FrozenSet, Iterator, Set
+
+from repro.utils import telemetry
+
+FAULT_ENV = "REPRO_FAULTS"
+
+FAULT_POINTS = (
+    "nan_weight",
+    "binned_overflow",
+    "oscillation",
+    "vmem_starve",
+    "shard_drop",
+)
+
+
+def _from_env() -> Set[str]:
+    raw = os.environ.get(FAULT_ENV, "")
+    names = {s.strip() for s in raw.split(",") if s.strip()}
+    unknown = names - set(FAULT_POINTS)
+    if unknown:
+        raise ValueError(
+            f"{FAULT_ENV} names unknown fault point(s) {sorted(unknown)}; "
+            f"registry: {FAULT_POINTS}")
+    return names
+
+
+_active: Set[str] = _from_env()
+
+
+def active() -> FrozenSet[str]:
+    """The armed fault set, for threading into jit/lru_cache keys."""
+    return frozenset(_active)
+
+
+def is_active(name: str) -> bool:
+    if name not in FAULT_POINTS:
+        raise ValueError(f"unknown fault point {name!r}; registry: {FAULT_POINTS}")
+    return name in _active
+
+
+def arm(*names: str) -> None:
+    for name in names:
+        if name not in FAULT_POINTS:
+            raise ValueError(
+                f"unknown fault point {name!r}; registry: {FAULT_POINTS}")
+        _active.add(name)
+        telemetry.bump(f"fault.armed.{name}")
+
+
+def disarm(*names: str) -> None:
+    """Disarm the given points, or everything when called with no args."""
+    if not names:
+        _active.clear()
+        return
+    for name in names:
+        _active.discard(name)
+
+
+@contextlib.contextmanager
+def inject(*names: str) -> Iterator[None]:
+    """Arm ``names`` for the duration of the block, restoring the previous
+    set on exit (exception-safe)."""
+    prev = set(_active)
+    arm(*names)
+    try:
+        yield
+    finally:
+        _active.clear()
+        _active.update(prev)

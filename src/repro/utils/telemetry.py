@@ -1,0 +1,41 @@
+"""Process-local telemetry counters for the robustness guard rails.
+
+Counters are bumped at HOST/trace time (guard activations, fallback
+engagements, fault injections) — never inside a compiled program — so they
+cost nothing on the device hot path.  A counter bumped during tracing counts
+compiled-program constructions, not per-call executions; that is the useful
+signal for guards that are resolved statically (e.g. "the packed id scatter
+was disabled for this capacity").
+
+>>> from repro.utils import telemetry
+>>> telemetry.bump("agg.pack_disabled")
+>>> telemetry.get("agg.pack_disabled")
+1
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict
+
+_lock = threading.Lock()
+_counters: Dict[str, int] = {}
+
+
+def bump(name: str, k: int = 1) -> None:
+    with _lock:
+        _counters[name] = _counters.get(name, 0) + k
+
+
+def get(name: str) -> int:
+    with _lock:
+        return _counters.get(name, 0)
+
+
+def snapshot() -> Dict[str, int]:
+    with _lock:
+        return dict(_counters)
+
+
+def reset() -> None:
+    with _lock:
+        _counters.clear()
