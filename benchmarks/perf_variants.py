@@ -50,6 +50,15 @@ aggregation split for both paths —
 
   PYTHONPATH=src python -m benchmarks.perf_variants aggregation \
       com-amazon algo=louvain repeat=3
+
+Batch-serve mode (DESIGN.md §Serving): throughput and latency of the
+capacity-bucketed batched engine (``louvain_batch``/``plp_batch``) against
+a sequential single-graph loop over the same many-small-graph workload
+(ego-net stand-ins), with a per-graph bitwise parity check against the
+unbatched oracle and a zero-recompile assertion on the steady state —
+
+  PYTHONPATH=src python -m benchmarks.perf_variants batch_serve \
+      com-dblp algo=both repeat=3 n_graphs=64
 """
 import json
 import os
@@ -924,11 +933,152 @@ def run_aggregation(dataset: str = "com-amazon", algo: str = "louvain",
     return out
 
 
+def _egonet_standins(n_graphs: int, seed: int):
+    """Ego-net-scale SBM stand-ins for the serving workload.
+
+    com-dblp has average degree ~6, so real ego-nets are TINY (tens of
+    vertices, a few hundred directed edges) — exactly the regime where
+    per-request overhead dominates and request batching pays.  Sizes
+    quantize onto a handful of capacity buckets at the default menus
+    (asserted in tests/test_batch.py)."""
+    import numpy as np
+
+    from repro.graph.builders import from_numpy_edges
+    from repro.graph.generators import sbm
+
+    sizes = (25, 35, 45)    # smoke and full differ in count, not scale
+    rng = np.random.default_rng(seed)
+    graphs = []
+    for i in range(n_graphs):
+        n = int(rng.choice(sizes))
+        k = int(rng.integers(3, 6))
+        u, v, _w, _t = sbm(n, k, p_in=0.35, p_out=0.03, seed=seed + 7919 * i)
+        graphs.append(from_numpy_edges(u, v, n=n))
+    return graphs
+
+
+def run_batch_serve(dataset: str = "com-dblp", algo: str = "both",
+                    repeat: int = 3, n_graphs: int = 64, seed: int = 0,
+                    backend: str = "ell"):
+    """Batched many-graph engine vs a sequential single-graph loop
+    (DESIGN.md §Serving).
+
+    Two arms over the SAME workload of ``n_graphs`` ego-net stand-ins:
+
+      * ``sequential`` — ``louvain(g)`` / ``plp(g)`` per graph, in submit
+        order; per-graph latency is its cumulative completion time (request
+        i waits for requests < i), the serving model without batching.
+      * ``batched``    — one ``louvain_batch``/``plp_batch`` call; every
+        graph's latency is the batch completion time (all requests land
+        together on the flush tick).
+
+    Both arms are warmed before timing (compiles excluded from both
+    equally); the measured phase then ASSERTS zero new batch-program
+    compiles (the steady-state contract of the signature-keyed program
+    cache) and per-graph bitwise parity between the arms.
+
+    The default backend is ``ell`` — the fused flagship configuration the
+    PR 1-6 arc built.  Its sequential driver pays a HOST-side ELL layout
+    build per request on top of per-request dispatch; the batched path
+    replaces both with the on-device traced re-bucketing at the bucket's
+    static menu width, which is where the bulk of the single-host speedup
+    comes from (on accelerators the per-dispatch launch overhead the batch
+    amortizes is far larger, and lanes run in parallel instead of
+    sequentially, so the gap widens).  ``backend=segment`` shows the
+    compute-bound floor: on a single-core CPU a vmapped lane costs the same
+    as a sequential call, so batching buys roughly the padding overhead
+    back and not much more.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import progcache
+    from repro.core.batch import louvain_batch, plp_batch
+    from repro.core.louvain import LouvainConfig, louvain
+    from repro.core.plp import PLPConfig, plp
+
+    from repro.kernels.common import capacity_signature
+
+    graphs = _egonet_standins(n_graphs, seed)
+    shapes = sorted({(g.n_max, g.m_max) for g in graphs})
+    sigs = sorted({tuple(capacity_signature(g.n_max, g.m_max))
+                   for g in graphs})
+    out = {"mode": "batch_serve", "dataset": f"{dataset}-egonet-standins",
+           "backend": backend, "n_graphs": n_graphs,
+           "distinct_shapes": len(shapes), "buckets": len(sigs),
+           "bucket_caps": [list(s[:2]) for s in sigs],
+           "cpu_count": os.cpu_count(),
+           "V_total": int(sum(g.n_max for g in graphs)),
+           "E_total": int(sum(g.m_max for g in graphs)) // 2}
+
+    arms = []
+    if algo in ("louvain", "both"):
+        cfg = LouvainConfig(track_modularity=False, backend=backend)
+        arms.append(("louvain", lambda g: louvain(g, cfg),
+                     lambda gs: louvain_batch(gs, cfg),
+                     lambda r: (r.labels, r.modularity)))
+    if algo in ("plp", "both"):
+        pcfg = PLPConfig(backend=backend)
+        arms.append(("plp", lambda g: plp(g, pcfg),
+                     lambda gs: plp_batch(gs, pcfg),
+                     lambda r: (r.labels, r.iterations)))
+
+    for name, single, batch, key in arms:
+        # ---- parity + warmup (compiles excluded from both arms equally)
+        oracle = [single(g) for g in graphs]
+        batched = batch(graphs)
+        for i, (o, b) in enumerate(zip(oracle, batched)):
+            ko, kb = key(o), key(b)
+            assert np.array_equal(ko[0], kb[0]) and ko[1:] == kb[1:], (
+                f"{name}: batched result differs from unbatched oracle "
+                f"for graph {i}")
+        out[f"{name}_bitwise_ok"] = True
+
+        # ---- steady state: zero new batch programs during measurement
+        stats0 = progcache.cache_stats()[f"batch.{name}"]
+        seq_best = bat_best = None
+        seq_lat = bat_lat = None
+        for _ in range(repeat):           # interleaved A/B best-of
+            t0 = time.perf_counter()
+            lat = []
+            for g in graphs:
+                single(g)
+                lat.append(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            if seq_best is None or dt < seq_best:
+                seq_best, seq_lat = dt, lat
+            t0 = time.perf_counter()
+            batch(graphs)
+            dt = time.perf_counter() - t0
+            if bat_best is None or dt < bat_best:
+                bat_best, bat_lat = dt, [dt] * len(graphs)
+        stats1 = progcache.cache_stats()[f"batch.{name}"]
+        recompiles = stats1["misses"] - stats0["misses"]
+        assert recompiles == 0, (
+            f"{name}: {recompiles} batch-program recompiles in steady state")
+        out[f"{name}_recompiles_measured"] = recompiles
+        out[f"{name}_program_cache"] = stats1
+
+        out[f"{name}_sequential_s"] = seq_best
+        out[f"{name}_batched_s"] = bat_best
+        out[f"{name}_throughput_sequential_gps"] = n_graphs / seq_best
+        out[f"{name}_throughput_batched_gps"] = n_graphs / bat_best
+        out[f"{name}_throughput_speedup"] = seq_best / bat_best
+        for arm, lat in (("sequential", seq_lat), ("batched", bat_lat)):
+            out[f"{name}_{arm}_p50_ms"] = float(np.percentile(lat, 50)) * 1e3
+            out[f"{name}_{arm}_p99_ms"] = float(np.percentile(lat, 99)) * 1e3
+
+    print(json.dumps(out, indent=1))
+    return out
+
+
 _MODES = {"community": run_community, "level_fusion": run_level_fusion,
           "gather_fusion": run_gather_fusion,
           "table_streaming": run_table_streaming,
           "coarse_cascade": run_coarse_cascade,
-          "aggregation": run_aggregation}
+          "aggregation": run_aggregation,
+          "batch_serve": run_batch_serve}
 
 
 def main():
@@ -937,7 +1087,8 @@ def main():
         kw = {}
         for tok in sys.argv[3:]:
             k, v = tok.split("=", 1)
-            kw[k] = int(v) if k in ("repeat", "block_rows") else v
+            kw[k] = (int(v) if k in ("repeat", "block_rows", "n_graphs",
+                                     "seed") else v)
         _MODES[sys.argv[1]](dataset, **kw)
         return
     arch, shape = sys.argv[1], sys.argv[2]

@@ -24,6 +24,11 @@
             two-step reference, per level and per cascade stage capacity,
             with bit-identical checks and the per-level aggregation share
             for both paths (artifact: BENCH_aggregation.json)
+  batch_serve — batched many-graph engine (capacity-bucketed
+            louvain_batch/plp_batch) vs a sequential single-graph loop on
+            an ego-net-scale serving workload: throughput, p50/p99 latency,
+            per-graph bitwise parity and a steady-state zero-recompile
+            check (artifact: BENCH_batch_serve.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -389,6 +394,41 @@ def bench_aggregation(datasets=("com-amazon", "com-dblp")):
     return rows
 
 
+# ------------------------------------------------------------------ batch serve
+
+
+def bench_batch_serve(datasets=("com-dblp",)):
+    """Batched many-graph engine vs a sequential single-graph loop
+    (DESIGN.md §Serving) — the measurement behind ``louvain_batch``/
+    ``plp_batch`` and the request-batching service."""
+    from benchmarks.perf_variants import run_batch_serve
+    smoke = bool(os.environ.get("REPRO_DATASET_SCALE"))
+    # full scale records the flagship fused (ell) serving configuration AND
+    # the segment compute-bound floor; smoke keeps CI to one backend
+    backends = ("ell",) if smoke else ("ell", "segment")
+    rows = []
+    for name in datasets:
+        for backend in backends:
+            rec = run_batch_serve(name, algo="both", repeat=3,
+                                  n_graphs=16 if smoke else 64,
+                                  backend=backend)
+            rows.append(rec)
+            for alg in ("plp", "louvain"):
+                print(f"[batch_serve] {name:14s} {backend:8s} {alg:8s} "
+                      f"seq {rec[f'{alg}_throughput_sequential_gps']:.1f} g/s -> "
+                      f"batched {rec[f'{alg}_throughput_batched_gps']:.1f} g/s "
+                      f"({rec[f'{alg}_throughput_speedup']:.2f}x)  "
+                      f"p99 {rec[f'{alg}_sequential_p99_ms']:.1f}ms -> "
+                      f"{rec[f'{alg}_batched_p99_ms']:.1f}ms  "
+                      f"bitwise_ok={rec[f'{alg}_bitwise_ok']} "
+                      f"recompiles={rec[f'{alg}_recompiles_measured']}")
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_batch_serve{suffix}", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -411,6 +451,7 @@ ALL = {
     "table_streaming": bench_table_streaming,
     "coarse_cascade": bench_coarse_cascade,
     "aggregation": bench_aggregation,
+    "batch_serve": bench_batch_serve,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,95 @@
+"""Batched many-graph serving: cluster a stream of ego-net-sized graphs
+through the capacity-bucketed batch engine (DESIGN.md §Serving).
+
+    PYTHONPATH=src python examples/batch_serve.py
+
+Demonstrates the three layers of the serving stack:
+
+  1. ``louvain_batch``/``plp_batch`` — bucket → pack → one vmapped
+     dispatch per bucket, bit-identical to the single-graph drivers.
+  2. The bounded compiled-program caches — a second wave of fresh
+     same-signature traffic adds ZERO compiles.
+  3. ``CommunityServeEngine`` — the request-batching service: robust
+     ingest, per-request RunReports, poisoned requests isolated.
+"""
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from launch.community_serve import CommunityRequest, CommunityServeEngine
+from repro.core import progcache
+from repro.core.batch import louvain_batch
+from repro.core.louvain import louvain
+from repro.graph.builders import from_numpy_edges
+from repro.graph.generators import sbm
+from repro.kernels.common import capacity_signature
+
+
+def make_egonets(count, seed=0):
+    """Ego-net-scale planted-partition stand-ins (tens of vertices)."""
+    rng = np.random.default_rng(seed)
+    graphs = []
+    for i in range(count):
+        n = int(rng.choice((25, 35, 45)))
+        u, v, _w, _t = sbm(n, int(rng.integers(3, 6)),
+                           p_in=0.35, p_out=0.03, seed=seed + 31 * i)
+        graphs.append((n, u, v))
+    return graphs
+
+
+def main():
+    egonets = make_egonets(64)
+
+    # --- 1. direct batch API: one dispatch, bitwise parity -----------------
+    graphs = [from_numpy_edges(u, v, n=n) for n, u, v in egonets]
+    sigs = {capacity_signature(g.n_max, g.m_max) for g in graphs}
+    print(f"{len(graphs)} graphs -> {len(sigs)} capacity bucket(s): "
+          f"{sorted((s.n_cap, s.m_cap) for s in sigs)}")
+
+    results = louvain_batch(graphs)          # compiles once per bucket
+    t0 = time.perf_counter()
+    results = louvain_batch(graphs)          # steady state: cache hit
+    batched_s = time.perf_counter() - t0
+    oracle = louvain(graphs[0])
+    assert np.array_equal(results[0].labels, oracle.labels)
+    assert results[0].modularity == oracle.modularity
+    print(f"batched: {len(graphs)} graphs in {batched_s*1e3:.1f} ms "
+          f"({len(graphs)/batched_s:.0f} graphs/s), "
+          f"slot 0 bit-identical to unbatched louvain()")
+
+    # --- 2. zero steady-state recompiles ----------------------------------
+    before = progcache.cache_stats()["batch.louvain"]["misses"]
+    fresh = [from_numpy_edges(u, v, n=n) for n, u, v in make_egonets(8, seed=99)]
+    louvain_batch(fresh)                     # new graphs, same signatures
+    after = progcache.cache_stats()["batch.louvain"]["misses"]
+    print(f"fresh same-signature traffic: {after - before} new compiles")
+
+    # --- 3. the request-batching service ----------------------------------
+    eng = CommunityServeEngine()
+    for i, (n, u, v) in enumerate(make_egonets(16, seed=7)):
+        eng.submit(CommunityRequest(request_id=f"ego{i}", u=u, v=v, n=n,
+                                    algo="plp" if i % 2 else "louvain"))
+    # a malformed request: rejected at ingest, never joins a batch
+    eng.submit(CommunityRequest(request_id="poison",
+                                u=np.array([0, 1]), v=np.array([1, 0]),
+                                w=np.array([np.nan, np.nan])))
+    responses = eng.flush()
+    ok = [r for r in responses if r.ok]
+    bad = [r for r in responses if not r.ok]
+    print(f"service: {len(ok)} served / {len(bad)} rejected "
+          f"(mean batch size {np.mean([r.batch_size for r in ok]):.1f})")
+    for r in ok[:2]:
+        print(f"  {r.request_id}: {len(set(r.labels.tolist()))} communities, "
+              f"latency {r.latency_s*1e3:.1f} ms, signature {r.signature}")
+    print(f"  {bad[0].request_id}: rejected ({bad[0].error.split(':')[0]})")
+    stats = eng.stats()
+    print(f"stats: served={stats['served']} dispatches={stats['dispatches']} "
+          f"programs={sorted(stats['programs'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Request-batching community-detection service (DESIGN.md §Serving).
+
+The single-graph drivers answer one graph per dispatch; serving traffic is
+many small graphs arriving independently.  ``CommunityServeEngine`` is the
+thin queueing layer that turns that traffic into the batched engine's
+shape:
+
+    submit() → canonical ingest (per request, so a poisoned edge list is
+               rejected/repaired BEFORE it can share a batch with clean
+               traffic) → queue
+    flush()  → group by (algo, capacity signature) → ``louvain_batch`` /
+               ``plp_batch`` dispatch per group → unpack per-request
+               responses with the PR-7 ``RunReport`` and wall-clock latency
+
+Batching changes throughput, never answers: every response is bit-identical
+to running the single-graph driver on the same request (the batch engine's
+parity contract).  If a batch trips a typed taxonomy error anyway (e.g. a
+numeric guard on inputs that passed ingest), the engine degrades that ONE
+group to sequential single-graph runs so clean requests still get answers
+and only the offending request carries the error — recorded in
+``stats()["counters"]`` as ``serve.batch_fallback_sequential``.
+
+Deliberately synchronous and in-process: flush() is the unit a real
+transport (thread, asyncio loop, RPC server) would call on its batching
+tick; the engine itself stays free of I/O so it can be tested and
+benchmarked hermetically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batch import louvain_batch, plp_batch
+from repro.core.louvain import LouvainConfig, louvain
+from repro.core.plp import PLPConfig, plp
+from repro.core import progcache
+from repro.graph.builders import from_numpy_edges_robust
+from repro.kernels.common import capacity_signature
+from repro.utils import telemetry
+from repro.utils.errors import CommunityDetectionError
+
+ALGOS = ("louvain", "plp")
+
+
+@dataclasses.dataclass
+class CommunityRequest:
+    """One graph to cluster: an undirected edge list + algorithm choice."""
+
+    request_id: str
+    u: np.ndarray
+    v: np.ndarray
+    w: Optional[np.ndarray] = None
+    algo: str = "louvain"          # "louvain" | "plp"
+    n: Optional[int] = None        # vertex count override (else max id + 1)
+
+
+@dataclasses.dataclass
+class CommunityResponse:
+    """Per-request outcome, positionally independent of batch placement."""
+
+    request_id: str
+    ok: bool
+    labels: Optional[np.ndarray] = None
+    result: object = None          # LouvainResult | PLPResult when ok
+    error: Optional[str] = None    # typed-taxonomy message when not ok
+    repairs: dict = dataclasses.field(default_factory=dict)
+    signature: Optional[tuple] = None
+    latency_s: float = 0.0         # submit() → response unpack, wall clock
+    batch_size: int = 0            # slots sharing this request's dispatch
+
+
+@dataclasses.dataclass
+class _Queued:
+    req: CommunityRequest
+    graph: object
+    repairs: dict
+    t_submit: float
+    seq: int
+
+
+class CommunityServeEngine:
+    """Queue → bucket → batch-dispatch → unpack (module docstring).
+
+    ``max_batch`` caps the slot count of one dispatch (memory bound);
+    larger groups are chunked.  ``ingest`` kwargs forward to
+    ``from_numpy_edges_robust`` (e.g. ``bad_weights="drop"`` to repair
+    rather than reject poisoned weights).
+    """
+
+    def __init__(self, louvain_cfg: LouvainConfig = LouvainConfig(),
+                 plp_cfg: PLPConfig = PLPConfig(), max_batch: int = 256,
+                 **ingest):
+        self.louvain_cfg = louvain_cfg
+        self.plp_cfg = plp_cfg
+        self.max_batch = int(max_batch)
+        self.ingest = ingest
+        self._queue: List[_Queued] = []
+        self._rejects: List[Tuple[int, CommunityResponse]] = []
+        self._seq = 0
+        self._served = 0
+        self._dispatches = 0
+
+    def submit(self, req: CommunityRequest) -> None:
+        """Validate + canonicalize one request onto the queue.
+
+        Ingest failures (typed ``InputValidationError`` etc.) consume the
+        request immediately — the error response comes back from the next
+        ``flush()`` — so a malformed edge list can never join a batch.
+        """
+        if req.algo not in ALGOS:
+            raise ValueError(f"unknown algo {req.algo!r}; choose {ALGOS}")
+        t0 = time.perf_counter()
+        self._seq += 1
+        try:
+            g, rep = from_numpy_edges_robust(req.u, req.v, req.w, n=req.n,
+                                             **self.ingest)
+        except CommunityDetectionError as err:
+            telemetry.bump("serve.ingest_reject")
+            self._rejects.append((self._seq, CommunityResponse(
+                request_id=req.request_id, ok=False,
+                error=f"{type(err).__name__}: {err}",
+                latency_s=time.perf_counter() - t0)))
+            return
+        self._queue.append(
+            _Queued(req, g, dataclasses.asdict(rep), t0, self._seq))
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> List[CommunityResponse]:
+        """Serve everything queued; responses in submit order."""
+        queue, self._queue = self._queue, []
+        rejects, self._rejects = self._rejects, []
+        groups: Dict[Tuple, List[_Queued]] = {}
+        for q in queue:
+            sig = (capacity_signature(q.graph.n_max, q.graph.m_max)
+                   if q.graph.n_max else None)
+            groups.setdefault((q.req.algo, sig), []).append(q)
+
+        tagged: List[Tuple[int, CommunityResponse]] = list(rejects)
+        for (algo, _sig), members in groups.items():
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                tagged += zip((q.seq for q in chunk),
+                              self._dispatch(algo, chunk))
+        tagged.sort(key=lambda t: t[0])   # submit order
+        return [r for _, r in tagged]
+
+    def _dispatch(self, algo: str,
+                  members: List[_Queued]) -> List[CommunityResponse]:
+        run_batch = louvain_batch if algo == "louvain" else plp_batch
+        cfg = self.louvain_cfg if algo == "louvain" else self.plp_cfg
+        graphs = [q.graph for q in members]
+        self._dispatches += 1
+        try:
+            results = run_batch(graphs, cfg)
+        except CommunityDetectionError:
+            # one poisoned slot must not starve its batch-mates: degrade
+            # this group to single-graph runs, isolating the error to the
+            # request that owns it
+            telemetry.bump("serve.batch_fallback_sequential")
+            results = []
+            single = louvain if algo == "louvain" else plp
+            for q in members:
+                try:
+                    results.append(single(q.graph, cfg))
+                except CommunityDetectionError as err:
+                    results.append(f"{type(err).__name__}: {err}")
+        out = []
+        for q, res in zip(members, results):
+            now = time.perf_counter()
+            sig = (tuple(capacity_signature(q.graph.n_max, q.graph.m_max))
+                   if q.graph.n_max else None)
+            if isinstance(res, str):
+                out.append(CommunityResponse(
+                    request_id=q.req.request_id, ok=False, error=res,
+                    repairs=q.repairs, signature=sig,
+                    latency_s=now - q.t_submit, batch_size=len(members)))
+                continue
+            self._served += 1
+            out.append(CommunityResponse(
+                request_id=q.req.request_id, ok=True, labels=res.labels,
+                result=res, repairs=q.repairs, signature=sig,
+                latency_s=now - q.t_submit, batch_size=len(members)))
+        return out
+
+    def stats(self) -> dict:
+        """Service + compiled-program-cache observability, one call."""
+        return {
+            "pending": len(self._queue),
+            "served": self._served,
+            "dispatches": self._dispatches,
+            "programs": progcache.cache_stats(),
+            "counters": {k: v for k, v in telemetry.snapshot().items()
+                         if k.startswith(("batch.", "serve.", "ladder."))},
+        }

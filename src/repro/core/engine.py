@@ -28,7 +28,6 @@ call per sweep) — the stepwise reference used by the parity tests and the
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache, partial
 from typing import Optional, Tuple
 
 import jax
@@ -38,6 +37,7 @@ import numpy as np
 from repro.config import ConfigBase
 from repro.core import moves
 from repro.core.common import luby_move_gate, neighbor_or_self_changed
+from repro.core.progcache import program_cache
 from repro.graph.structure import Graph
 
 # Per-evaluator Luby coin stream constants (kept distinct so PLP and Louvain
@@ -399,7 +399,7 @@ def _donate_labels() -> bool:
     return jax.default_backend() != "cpu"
 
 
-@lru_cache(maxsize=None)
+@program_cache("engine.fused_phase", maxsize=128)
 def _fused_phase_fn(spec: EngineSpec, donate: bool):
     def phase(g, ell, labels, active, it0, seed, restrict):
         return device_phase(spec, g, ell, labels, active, it0, seed, restrict)
@@ -407,7 +407,7 @@ def _fused_phase_fn(spec: EngineSpec, donate: bool):
     return jax.jit(phase, donate_argnums=(2, 3) if donate else ())
 
 
-@lru_cache(maxsize=None)
+@program_cache("engine.step", maxsize=128)
 def _step_fn(spec: EngineSpec):
     def one_sweep(g, ell, labels, active, it, seed, restrict):
         return make_step(spec, g, ell, restrict)(labels, active, it, seed)
@@ -568,7 +568,7 @@ def make_distributed_step(spec: EngineSpec, axes, n: int, src, dst, w, emask,
     return step
 
 
-@lru_cache(maxsize=None)
+@program_cache("engine.distributed_phase", maxsize=32)
 def make_distributed_phase(mesh, n: int, spec: EngineSpec):
     """Build the jitted fused phase for edge-partitioned shards.
 

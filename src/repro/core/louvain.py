@@ -43,7 +43,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
-from functools import lru_cache
 from typing import Optional, Tuple
 
 import jax
@@ -54,6 +53,7 @@ from repro.config import ConfigBase
 from repro.core import aggregation
 from repro.core.engine import EngineSpec, SweepEngine, device_phase
 from repro.core.modularity import modularity
+from repro.core.progcache import program_cache
 from repro.graph.structure import Graph
 from repro.kernels.common import accum_needs_promotion, pick_ell_width
 from repro.utils import faultinject, telemetry
@@ -312,13 +312,18 @@ def _graph_arrays(g: Graph):
     return (g.src, g.dst, g.w, g.edge_mask, g.n_valid, g.m_valid)
 
 
-@lru_cache(maxsize=None)
-def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
-              refine_spec: Optional[EngineSpec], max_levels: int,
-              track_modularity: bool, next_caps: Optional[Tuple[int, int]],
-              agg_method: str = "binned",
-              faults: frozenset = frozenset(), promote: bool = False):
-    """Build one jitted cascade stage (DESIGN.md §Pipeline).
+def _build_stage(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
+                 refine_spec: Optional[EngineSpec], max_levels: int,
+                 track_modularity: bool, next_caps: Optional[Tuple[int, int]],
+                 agg_method: str = "binned",
+                 faults: frozenset = frozenset(), promote: bool = False):
+    """Build one (un-jitted) cascade stage function (DESIGN.md §Pipeline).
+
+    ``_stage_fn`` wraps this in ``jax.jit`` for the single-graph cascade
+    driver; the batched many-graph engine (``core.batch``) instead lifts the
+    same pure stage function through ``jax.vmap`` — one builder, two
+    dispatch disciplines, so the batched path can never drift from the
+    single-graph parity oracle.
 
     ``spec0 is not None`` marks stage 0: level 0 is peeled out of the loop
     (it may use the host-built ELL backend and always starts from
@@ -341,11 +346,6 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
     guard rail): each level ORs in a finiteness check of its input graph,
     and the driver refuses the answer (``NumericError``) if it comes back
     set — it rides the same bulk readback, costing no extra transfer.
-
-    ``faults`` / ``promote`` are part of the lru_cache key ON PURPOSE: a
-    trace compiled clean must never be reused under injection (and vice
-    versa).  Clean runs always pass the defaults, so their cache behavior
-    is unchanged.
     """
 
     def stage(g: Graph, ell, g0: Graph, seed, assign, init_com, macro_in,
@@ -510,10 +510,32 @@ def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                 level, done, nv, mv, max_deg,
                 final_assign, n_final, q_final)
 
-    return jax.jit(stage)
+    return stage
 
 
-@lru_cache(maxsize=None)
+@program_cache("louvain.stage", maxsize=64)
+def _stage_fn(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
+              refine_spec: Optional[EngineSpec], max_levels: int,
+              track_modularity: bool, next_caps: Optional[Tuple[int, int]],
+              agg_method: str = "binned",
+              faults: frozenset = frozenset(), promote: bool = False):
+    """Jitted ``_build_stage``, memoized on the full static key.
+
+    ``faults`` / ``promote`` are part of the cache key ON PURPOSE: a trace
+    compiled clean must never be reused under injection (and vice versa).
+    Clean runs always pass the defaults, so their cache behavior is
+    unchanged.  The cache is bounded (DESIGN.md §Serving): the key ranges
+    over the static menus (≤4 cascade capacities, 3 ELL widths, spec
+    variants), so 64 entries hold every program a sane workload compiles
+    and a long-lived serving process cannot leak programs across config
+    churn.
+    """
+    return jax.jit(_build_stage(spec0, spec_coarse, refine_spec, max_levels,
+                                track_modularity, next_caps, agg_method,
+                                faults, promote))
+
+
+@program_cache("louvain.shrink", maxsize=64)
 def _shrink_fn(n_in: int, m_in: int, n_out: int, m_out: int):
     """Jitted stage-boundary compaction: slice the front-compacted carried
     graph (and the Leiden macro seed) into the next static capacity —

@@ -1,0 +1,59 @@
+"""Bounded compiled-program caches (DESIGN.md §Serving).
+
+Every jitted-program factory on the hot path (`engine._fused_phase_fn`,
+`louvain._stage_fn`, the batch-engine programs, ...) is memoized so repeated
+driver calls reuse compiled programs instead of retracing fresh closures.
+Unbounded memoization is fine for a single run but a LEAK in a long-lived
+serving process: config churn (changing seeds live in the jit key via the
+spec, fault tuples, capacity signatures) would accumulate compiled programs
+without bound.  This module is the one place those caches are created, so
+they are all
+
+  * bounded — an explicit ``maxsize`` per cache, sized to the static menus
+    that feed its key (capacity signatures, width menus, cascade stages);
+    steady-state traffic therefore stays at 100% hits while a pathological
+    key churn evicts LRU programs instead of growing forever;
+  * observable — ``cache_stats()`` reports hits/misses/size per cache (the
+    cache-stats hook), and the serving layer exposes it per engine.
+
+The wrapped functions keep the full ``functools.lru_cache`` interface
+(``cache_info()`` / ``cache_clear()``), so existing test hooks like
+``louvain._stage_fn.cache_info().misses`` are unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+# name -> lru-wrapped factory; insertion-ordered, names are dotted paths
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def program_cache(name: str, maxsize: int):
+    """``functools.lru_cache(maxsize=...)`` that self-registers for stats.
+
+    ``name`` must be unique (it is the stats key); re-decorating under an
+    existing name (module reload in tests) simply replaces the entry.
+    """
+
+    def deco(fn):
+        wrapped = functools.lru_cache(maxsize=maxsize)(fn)
+        _REGISTRY[name] = wrapped
+        return wrapped
+
+    return deco
+
+
+def cache_stats() -> dict:
+    """{name: {hits, misses, maxsize, currsize}} for every program cache."""
+    return {
+        name: dict(c.cache_info()._asdict())
+        for name, c in sorted(_REGISTRY.items())
+    }
+
+
+def clear_caches() -> None:
+    """Drop every cached program (test hook; frees the compiled executables
+    once JAX's own jit cache releases them)."""
+    for c in _REGISTRY.values():
+        c.cache_clear()

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import os
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -144,6 +145,79 @@ def pick_ell_width(max_deg: int | None, n_cap: int, m_cap: int) -> int:
         if max_deg <= width:
             return width
     return STAGE_WIDTH_MENU[-1]
+
+
+# ------------------------------------------------------------ capacity buckets
+
+# Static capacity menu for the batched many-graph engine (DESIGN.md
+# §Serving): doubling steps UP from ego-net-scale floors.  Graphs are
+# padded up to the smallest menu capacity that holds them, so the set of
+# distinct padded shapes — and with it the set of compiled batch programs —
+# grows logarithmically in the largest graph served, not linearly in the
+# number of distinct graph sizes.
+#
+# The step is 2 (not the cascade's shrink=4) and the floors sit well below
+# the cascade floors ON PURPOSE: padding is pure wasted compute for every
+# lane of a batch (a vmapped sweep touches every padded slot), so the menu
+# bounds the waste at <2× worst-case / ~1.4× expected, where a quarter-step
+# menu anchored at (256, 2048) inflates ego-net-sized graphs (n≈30-100,
+# m≈100-600) by up to an order of magnitude.  The cost of the finer menu is
+# only more compiled programs — still logarithmic, still LRU-bounded.
+BUCKET_N_FLOOR = 64
+BUCKET_M_FLOOR = 256
+BUCKET_STEP = 2
+
+
+def bucket_capacity(x: int, floor: int, step: int = BUCKET_STEP) -> int:
+    """Smallest menu capacity >= x, menu = floor · step^k (k >= 0)."""
+    if x < 0:
+        raise ValueError(f"capacity must be >= 0, got {x}")
+    cap = int(floor)
+    while cap < x:
+        cap *= step
+    return cap
+
+
+class CapacitySignature(NamedTuple):
+    """Hashable identity of one compiled batch program (DESIGN.md §Serving).
+
+    Two graphs with equal signatures pack into the same bucket and run under
+    the SAME cached compiled program: ``n_cap``/``m_cap`` are the padded
+    static capacities (the array shapes), ``ell_width`` the traced-ELL menu
+    width those capacities pick (the ell/pallas tile shape), and
+    ``schedule`` the capacity schedule the padded graph would cascade
+    through — all static trace inputs, so equal signatures imply equal
+    traces.
+    """
+
+    n_cap: int
+    m_cap: int
+    ell_width: int
+    schedule: tuple
+
+
+def capacity_signature(n_cap: int, m_cap: int,
+                       ell_width: int | None = None,
+                       schedule: tuple | None = None) -> CapacitySignature:
+    """Bucket a graph's (n_max, m_max) onto the static capacity menu.
+
+    Reuses the existing static menus end to end: capacities quantize onto
+    the doubling menu above, ``ell_width``
+    defaults to the ``pick_ell_width`` menu pick at the bucket capacities
+    (``pick_bin_width`` resolves identically, so the aggregation bin width
+    is covered by the same field), and ``schedule`` defaults to the bounded
+    ``auto_capacity_schedule`` at the bucket capacities.
+    """
+    nb = bucket_capacity(int(n_cap), BUCKET_N_FLOOR)
+    mb = bucket_capacity(int(m_cap), BUCKET_M_FLOOR)
+    if ell_width is None:
+        ell_width = pick_ell_width(None, nb, mb)
+    if schedule is None:
+        # late import: core.louvain imports this module at load time
+        from repro.core.louvain import auto_capacity_schedule
+
+        schedule = auto_capacity_schedule(nb, mb)
+    return CapacitySignature(nb, mb, int(ell_width), tuple(schedule))
 
 
 # ---------------------------------------------------------------- aggregation

@@ -1,0 +1,296 @@
+"""Batched many-graph engine (DESIGN.md §Serving).
+
+The contract under test, in order of importance:
+
+  1. **Parity** — for every graph in a batch, ``louvain_batch``/``plp_batch``
+     return results bit-identical to the single-graph drivers (the
+     capacity-portability contract extended over the vmap batch axis), on
+     every backend including the documented pallas→ell vmap fallback.
+  2. **Bucketing** — ``capacity_signature`` quantizes arbitrary graph sizes
+     onto the menu anchored at the cascade floors; realistic many-graph
+     workloads land on a handful of buckets (≤4 at the default menus).
+  3. **Program reuse** — same-signature traffic hits the bounded LRU
+     program caches; the caches expose stats and honor their maxsize.
+  4. **Robustness** — degenerate graphs (zero-capacity, all-isolates)
+     flow through a batch without poisoning their batch-mates, with the
+     PR-7 per-graph RunReport discipline intact.
+"""
+import numpy as np
+import pytest
+
+from repro.core import progcache
+from repro.core.batch import louvain_batch, pick_batch_slots, plp_batch
+from repro.core.louvain import LouvainConfig, louvain
+from repro.core.plp import PLPConfig, plp
+from repro.graph import packing
+from repro.graph.builders import from_numpy_edges
+from repro.graph.generators import rmat, sbm
+from repro.kernels.common import bucket_capacity, capacity_signature
+
+E = np.zeros(0, np.int64)
+
+
+def _sbm_graphs(sizes, seed0=0):
+    gs = []
+    for i, n in enumerate(sizes):
+        u, v, _w, _t = sbm(n, 4, p_in=0.3, p_out=0.02, seed=seed0 + i)
+        gs.append(from_numpy_edges(u, v, n=n))
+    return gs
+
+
+# ----------------------------------------------------------------- signature
+
+
+def test_bucket_capacity_menu():
+    assert bucket_capacity(1, 64) == 64
+    assert bucket_capacity(64, 64) == 64
+    assert bucket_capacity(65, 64) == 128
+    assert bucket_capacity(5000, 64) == 8192
+    with pytest.raises(ValueError):
+        bucket_capacity(-1, 64)
+
+
+def test_capacity_signature_quantizes_and_schedules():
+    a = capacity_signature(100, 900)
+    b = capacity_signature(120, 1000)
+    assert a == b                      # same bucket despite different sizes
+    assert a.n_cap == 128 and a.m_cap == 1024
+    assert a.ell_width > 0
+    assert isinstance(a.schedule, tuple)
+    big = capacity_signature(5000, 200000)
+    assert big.n_cap > a.n_cap and len(big.schedule) >= 1
+
+
+def test_realistic_workloads_land_on_few_buckets():
+    """Planted-partition ego-net stand-ins (the serving workload) and an
+    R-MAT sweep each land on a handful of buckets at the default menus —
+    the serving premise that makes request batching effective."""
+    egonets = _sbm_graphs([30, 40, 45, 55, 60, 40, 35, 50, 60, 30])
+    sigs = {capacity_signature(g.n_max, g.m_max) for g in egonets}
+    assert len(sigs) <= 4, sorted(sigs)
+    rmats = []
+    for scale in (6, 7, 8):
+        u, v, _w = rmat(scale, 8, seed=scale)
+        rmats.append(from_numpy_edges(u, v, n=1 << scale))
+    rsigs = {capacity_signature(g.n_max, g.m_max) for g in rmats}
+    assert len(rsigs) <= 4, sorted(rsigs)
+
+
+def test_pick_batch_slots():
+    assert [pick_batch_slots(k) for k in (1, 2, 3, 5, 64, 65)] == \
+        [1, 2, 4, 8, 64, 128]
+    with pytest.raises(ValueError):
+        pick_batch_slots(0)
+
+
+# ------------------------------------------------------------------- packing
+
+
+def test_pad_graph_grow_only_and_parity():
+    g = _sbm_graphs([50])[0]
+    p = packing.pad_graph(g, 256, 2048)
+    assert (p.n_max, p.m_max) == (256, 2048)
+    assert int(p.n_valid) == int(g.n_valid)
+    assert int(p.m_valid) == int(g.m_valid)
+    # padded run is bit-identical on valid vertices (capacity portability)
+    r0 = louvain(g)
+    r1 = louvain(p)
+    assert np.array_equal(r0.labels, r1.labels[:g.n_max])
+    assert r0.modularity == r1.modularity
+    with pytest.raises(ValueError):
+        packing.pad_graph(p, 128, 2048)
+
+
+def test_stack_graphs_validates():
+    a, b = _sbm_graphs([50, 80])
+    with pytest.raises(ValueError):
+        packing.stack_graphs([a, b])   # capacity mismatch
+    pa = packing.pad_graph(a, 256, 2048)
+    pb = packing.pad_graph(b, 256, 2048)
+    gb = packing.stack_graphs([pa, pb])
+    assert gb.src.shape == (2, 2048)
+    assert gb.n_valid.shape == (2,)
+    assert gb.n_max == 256
+
+
+# -------------------------------------------------------------------- parity
+
+
+BACKENDS = ("segment", "ell", "pallas")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_louvain_batch_parity(backend):
+    """Batched results are bit-identical to the unbatched driver per graph
+    (mixed sizes → multiple buckets in one call)."""
+    gs = _sbm_graphs([40, 90, 150, 300, 60])
+    cfg = LouvainConfig(backend=backend)
+    batched = louvain_batch(gs, cfg)
+    for g, r in zip(gs, batched):
+        u = louvain(g, cfg)
+        assert np.array_equal(r.labels, u.labels)
+        assert r.modularity == u.modularity
+        assert r.levels == u.levels
+        assert r.n_communities == u.n_communities
+        assert r.sweeps_per_level == u.sweeps_per_level
+        assert r.modularity_history == u.modularity_history
+        assert r.delta_n_per_level == u.delta_n_per_level
+        # watchdog/precision warnings are part of parity; the static
+        # pallas→ell fallback is telemetry, never a degradation
+        assert r.run_report.warnings == u.run_report.warnings
+        assert r.run_report.degradations == []
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plp_batch_parity(backend):
+    gs = _sbm_graphs([40, 90, 150, 300, 60], seed0=10)
+    cfg = PLPConfig(backend=backend)
+    batched = plp_batch(gs, cfg)
+    for g, r in zip(gs, batched):
+        u = plp(g, cfg)
+        assert np.array_equal(r.labels, u.labels)
+        assert r.iterations == u.iterations
+        assert r.delta_n_history == u.delta_n_history
+        assert r.active_history == u.active_history
+
+
+def test_batch_padding_slots_do_not_change_results():
+    """Results are invariant to batch-mates and slot padding: a graph
+    clustered alone, in a ragged batch, and in a full batch gets identical
+    labels (vmap-lane independence)."""
+    gs = _sbm_graphs([70, 70, 70, 70, 70], seed0=20)
+    alone = louvain_batch(gs[:1])[0]
+    ragged = louvain_batch(gs[:3])[0]      # 3 → 4 slots, 1 filler
+    full = louvain_batch(gs)[0]            # 5 → 8 slots, 3 fillers
+    assert np.array_equal(alone.labels, ragged.labels)
+    assert np.array_equal(alone.labels, full.labels)
+    assert alone.modularity == ragged.modularity == full.modularity
+
+
+def test_leiden_batch_parity():
+    gs = _sbm_graphs([60, 120], seed0=30)
+    cfg = LouvainConfig(refine=True)
+    batched = louvain_batch(gs, cfg)
+    for g, r in zip(gs, batched):
+        u = louvain(g, cfg)
+        assert np.array_equal(r.labels, u.labels)
+        assert r.modularity == u.modularity
+
+
+# ------------------------------------------------------------- program cache
+
+
+def test_same_signature_hits_program_cache():
+    """Same-signature traffic reuses the compiled batch program: after a
+    warm call, a second batch with DIFFERENT graphs of the same signature
+    adds zero cache misses (the zero-steady-state-recompile contract)."""
+    def gs(sizes, seed0):
+        # pin capacities so both waves provably share one bucket signature
+        out = []
+        for i, n in enumerate(sizes):
+            u, v, _w, _t = sbm(n, 4, p_in=0.3, p_out=0.02, seed=seed0 + i)
+            out.append(from_numpy_edges(u, v, n=100, m_max=1000))
+        return out
+
+    cfg = LouvainConfig()
+    louvain_batch(gs([50, 80], seed0=40), cfg)               # warm
+    info0 = progcache.cache_stats()["batch.louvain"]
+    louvain_batch(gs([66, 99], seed0=50), cfg)               # same signature
+    info1 = progcache.cache_stats()["batch.louvain"]
+    assert info1["misses"] == info0["misses"]
+    assert info1["hits"] > info0["hits"]
+
+
+def test_cache_stats_exposes_bounded_caches():
+    """Every compiled-program cache is registered, observable, and bounded
+    (satellite: the formerly-unbounded lru_caches now declare a maxsize)."""
+    stats = progcache.cache_stats()
+    for name in ("batch.louvain", "batch.plp", "engine.fused_phase",
+                 "engine.step", "engine.distributed_phase", "louvain.stage",
+                 "louvain.shrink"):
+        assert name in stats, name
+        assert stats[name]["maxsize"] is not None
+        assert stats[name]["maxsize"] > 0
+
+
+# ---------------------------------------------------------------- degenerate
+
+
+def test_batch_with_empty_graph_slot():
+    """A zero-capacity graph in a batch short-circuits to the trivial
+    result (PR-7 contract) without poisoning its batch-mates."""
+    gs = _sbm_graphs([60], seed0=60)
+    empty = from_numpy_edges(E, E, n=0)
+    mixed = [gs[0], empty, gs[0]]
+    out = louvain_batch(mixed)
+    assert out[1].labels.shape == (0,)
+    assert out[1].n_communities == 0
+    assert out[1].modularity == 0.0
+    assert out[1].run_report.clean
+    oracle = louvain(gs[0])
+    for r in (out[0], out[2]):
+        assert np.array_equal(r.labels, oracle.labels)
+        assert r.modularity == oracle.modularity
+
+    pout = plp_batch(mixed)
+    assert pout[1].labels.shape == (0,)
+    assert pout[1].iterations == 0
+    p_oracle = plp(gs[0])
+    assert np.array_equal(pout[0].labels, p_oracle.labels)
+
+
+def test_batch_with_all_isolates_slot():
+    """All-isolated-vertices graphs (0 edges, n > 0) batch cleanly next to
+    normal graphs and keep their singleton answer."""
+    iso = from_numpy_edges(E, E, n=5)
+    gs = _sbm_graphs([60], seed0=70)
+    out = louvain_batch([iso, gs[0]])
+    oracle_iso = louvain(iso)
+    assert np.array_equal(out[0].labels, oracle_iso.labels)
+    assert out[0].n_communities == 5
+    assert out[0].modularity == 0.0
+    assert np.array_equal(out[1].labels, louvain(gs[0]).labels)
+
+
+# ------------------------------------------------------------------- service
+
+
+def test_serve_engine_end_to_end():
+    from launch.community_serve import (CommunityRequest,
+                                        CommunityServeEngine)
+
+    eng = CommunityServeEngine()
+    sizes = [50, 80, 120, 50]
+    for i, n in enumerate(sizes):
+        u, v, _w, _t = sbm(n, 4, p_in=0.3, p_out=0.02, seed=80 + i)
+        eng.submit(CommunityRequest(request_id=f"r{i}", u=u, v=v, n=n,
+                                    algo="plp" if i == 3 else "louvain"))
+    # poisoned request: rejected at ingest, never joins a batch
+    eng.submit(CommunityRequest(
+        request_id="bad", u=np.array([0, 1]), v=np.array([1, 2]),
+        w=np.array([np.nan, 1.0])))
+    assert eng.pending() == 4
+    resp = eng.flush()
+    assert [r.request_id for r in resp] == ["r0", "r1", "r2", "r3", "bad"]
+    by_id = {r.request_id: r for r in resp}
+    assert not by_id["bad"].ok and "InputValidationError" in by_id["bad"].error
+    for i, n in enumerate(sizes):
+        r = by_id[f"r{i}"]
+        assert r.ok and r.labels.shape == (n,)
+        assert r.latency_s > 0 and r.batch_size >= 1
+    # bitwise parity through the whole service path
+    u, v, _w, _t = sbm(50, 4, p_in=0.3, p_out=0.02, seed=80)
+    assert np.array_equal(by_id["r0"].labels,
+                          louvain(from_numpy_edges(u, v, n=50)).labels)
+    stats = eng.stats()
+    assert stats["served"] == 4
+    assert stats["pending"] == 0
+    assert "batch.louvain" in stats["programs"]
+    assert stats["counters"].get("serve.ingest_reject", 0) >= 1
+    # a second flush serves fresh same-signature traffic from cache
+    misses0 = eng.stats()["programs"]["batch.louvain"]["misses"]
+    u, v, _w, _t = sbm(66, 4, p_in=0.3, p_out=0.02, seed=99)
+    eng.submit(CommunityRequest(request_id="r9", u=u, v=v, n=66))
+    r9 = eng.flush()[0]
+    assert r9.ok
+    assert eng.stats()["programs"]["batch.louvain"]["misses"] == misses0

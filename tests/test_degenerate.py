@@ -87,3 +87,32 @@ def test_isolates_modularity_is_zero_not_nan():
     res = louvain(g)
     assert res.modularity == 0.0
     assert res.run_report.clean
+
+
+def test_degenerate_graphs_inside_a_batch():
+    """Every degenerate shape above also flows through the BATCHED engine
+    (DESIGN.md §Serving) next to a normal graph, with the same answers:
+    zero-capacity inputs short-circuit to the trivial result without
+    occupying a slot, and no degenerate slot poisons its batch-mates."""
+    from repro.core.batch import louvain_batch, plp_batch
+    from repro.graph.generators import sbm
+
+    u, v, _w, _t = sbm(40, 4, p_in=0.3, p_out=0.05, seed=3)
+    normal = from_numpy_edges(u, v, n=40)
+    names = sorted(_graphs())
+    degenerates = [from_numpy_edges(*a, **kw)
+                   for a, kw, _ in (_graphs()[n] for n in names)]
+    batch = degenerates + [from_numpy_edges(E, E, EW, n=0), normal]
+
+    out = louvain_batch(batch)
+    for name, r in zip(names, out):
+        expect = _graphs()[name][2]
+        assert r.n_communities == expect, name
+        assert np.isfinite(r.modularity), name
+        assert r.run_report.clean, name
+    assert out[-2].labels.shape == (0,) and out[-2].n_communities == 0
+    assert np.array_equal(out[-1].labels, louvain(normal).labels)
+
+    pout = plp_batch(batch)
+    assert pout[-2].labels.shape == (0,) and pout[-2].iterations == 0
+    assert np.array_equal(pout[-1].labels, plp(normal).labels)
