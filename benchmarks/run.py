@@ -29,6 +29,10 @@
             an ego-net-scale serving workload: throughput, p50/p99 latency,
             per-graph bitwise parity and a steady-state zero-recompile
             check (artifact: BENCH_batch_serve.json)
+  serve_resilience — steady-state serving under 0%/5%/20% injected
+            transient dispatch faults: throughput/p99, shed-rate, retry
+            absorption, breaker trips and recovery time
+            (artifact: BENCH_serve_resilience.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -429,6 +433,39 @@ def bench_batch_serve(datasets=("com-dblp",)):
     return rows
 
 
+# ------------------------------------------------------------- serve resilience
+
+
+def bench_serve_resilience(datasets=("com-dblp",)):
+    """Steady-state serving under 0%/5%/20% injected transient faults
+    (DESIGN.md §Resilience) — the measurement behind the deadline/retry/
+    breaker machinery: shed-rate, breaker trips and recovery time."""
+    from benchmarks.perf_variants import run_serve_resilience
+    smoke = bool(os.environ.get("REPRO_DATASET_SCALE"))
+    rows = []
+    for name in datasets:
+        rec = run_serve_resilience(name,
+                                   ticks=12 if smoke else 90,
+                                   per_tick=4 if smoke else 8,
+                                   n_graphs=3 if smoke else 6)
+        rows.append(rec)
+        for arm in rec["arms"]:
+            rs = arm["recovery_s"]
+            p99 = arm["p99_ms"]
+            print(f"[serve_resilience] {name:14s} {arm['arm']:12s} "
+                  f"{arm['throughput_gps']:6.1f} g/s  "
+                  f"p99={p99 and f'{p99:.1f}ms' or 'n/a'}  "
+                  f"ok={arm['served']}/{arm['submitted']} "
+                  f"shed={arm['shed_rate']:.1%} "
+                  f"retries={arm['retries']} trips={arm['breaker_trips']} "
+                  f"recovery={rs and f'{rs:.2f}s' or '-'}")
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_serve_resilience{suffix}", rows)
+    return rows
+
+
 # ------------------------------------------------------------------ roofline
 
 
@@ -452,6 +489,7 @@ ALL = {
     "coarse_cascade": bench_coarse_cascade,
     "aggregation": bench_aggregation,
     "batch_serve": bench_batch_serve,
+    "serve_resilience": bench_serve_resilience,
     "roofline": bench_roofline,
 }
 

@@ -49,6 +49,7 @@ precision warnings are recorded per slot.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -70,9 +71,33 @@ from repro.graph import packing
 from repro.graph.structure import Graph
 from repro.kernels.common import (CapacitySignature, accum_needs_promotion,
                                   capacity_signature)
-from repro.utils import faultinject, telemetry
-from repro.utils.errors import NumericError, RunReport
+from repro.utils import faultinject, resilience, telemetry
+from repro.utils.errors import DeadlineError, KernelError, NumericError, RunReport
 from repro.utils.timing import Timer
+
+
+def _dispatch_guarded(run, deadline: Optional[resilience.Deadline]):
+    """Execute one bucket dispatch under the serving resilience contract
+    (DESIGN.md §Resilience): the chaos fault sites fire HERE (inside the
+    watchdogged callable, so a stalled dispatch is indistinguishable from
+    a hung device) and, when a deadline rides the call, the whole thing
+    runs under ``resilience.call_with_deadline`` — on overrun the wait is
+    cancelled with a typed ``DeadlineError`` and the worker abandoned.
+    ``deadline=None`` is the clean path: a plain inline call, no thread."""
+
+    def attempt():
+        if faultinject.should_fire("slow_dispatch"):
+            # models a hung device / pathological recompile: stall inside
+            # the watchdog window
+            time.sleep(faultinject.slow_dispatch_seconds())
+        if faultinject.should_fire("transient_batch_fail"):
+            raise KernelError(
+                "injected transient batch dispatch failure "
+                "(fault point: transient_batch_fail)")
+        return run()
+
+    return resilience.call_with_deadline(
+        attempt, deadline.remaining_s() if deadline is not None else None)
 
 
 def pick_batch_slots(n_graphs: int) -> int:
@@ -187,7 +212,8 @@ def _chunks(idxs: List[int], max_slots: int):
 
 def louvain_batch(graphs: Sequence[Graph],
                   cfg: LouvainConfig = LouvainConfig(),
-                  max_slots: int = MAX_SLOTS) -> List[LouvainResult]:
+                  max_slots: int = MAX_SLOTS,
+                  deadline_s: Optional[float] = None) -> List[LouvainResult]:
     """Run Louvain over many graphs with one dispatch per capacity bucket
     (buckets wider than ``max_slots`` are chunked — see ``MAX_SLOTS``).
 
@@ -198,11 +224,20 @@ def louvain_batch(graphs: Sequence[Graph],
     weights in some slots, ``NumericError`` names those graph indices —
     clean graphs in the same batch are unaffected (their results would be
     returned on a retry without the poisoned inputs).
+
+    ``deadline_s`` bounds the WHOLE call (DESIGN.md §Resilience): each
+    bucket dispatch runs under the remaining-budget watchdog and overrun
+    raises a typed ``DeadlineError`` — per-request deadline splitting
+    (fail only the expired requests, re-run the rest) is the serving
+    layer's job, which knows who owns which deadline.  ``None`` is the
+    clean path: no watchdog thread, behavior unchanged.
     """
     graphs = list(graphs)
     results: List[Optional[LouvainResult]] = [None] * len(graphs)
     active_faults = sorted(faultinject.active())
     faults = frozenset(active_faults)
+    deadline = (resilience.Deadline(deadline_s)
+                if deadline_s is not None else None)
 
     buckets: Dict[Tuple, List[int]] = {}
     for i, g in enumerate(graphs):
@@ -216,9 +251,13 @@ def louvain_batch(graphs: Sequence[Graph],
     bad_slots: List[int] = []
     for (sig, sorted_by), idxs in buckets.items():
         for chunk in _chunks(idxs, max_slots):
+            if deadline is not None and deadline.expired:
+                raise DeadlineError(
+                    f"batch deadline ({deadline_s:.3f}s) expired with "
+                    "bucket dispatches still pending")
             bad_slots += _run_louvain_bucket(
                 graphs, chunk, sig, sorted_by, cfg, faults, active_faults,
-                results)
+                results, deadline)
     if bad_slots:
         raise NumericError(
             "non-finite edge weight detected inside the fused level loop "
@@ -228,7 +267,9 @@ def louvain_batch(graphs: Sequence[Graph],
 
 def _run_louvain_bucket(graphs, idxs, sig: CapacitySignature,
                         sorted_by, cfg: LouvainConfig, faults: frozenset,
-                        active_faults, results) -> List[int]:
+                        active_faults, results,
+                        deadline: Optional[resilience.Deadline] = None,
+                        ) -> List[int]:
     timer = Timer()
     backend = _resolve_batch_backend(cfg.backend, sorted_by == "src")
     spec0, spec_coarse, refine_spec = _louvain_specs(cfg, sig, backend,
@@ -249,8 +290,10 @@ def _run_louvain_bucket(graphs, idxs, sig: CapacitySignature,
                            cfg.max_levels, cfg.track_modularity,
                            cfg.aggregation, faults, promote)
     with timer.phase("pipeline"):
-        out = fn(gb, jnp.uint32(cfg.seed))
-        host = _readback(out)   # ONE bulk transfer per bucket
+        # ONE bulk transfer per bucket; under a deadline the dispatch +
+        # readback run watchdogged (fault sites fire inside the window)
+        host = _dispatch_guarded(
+            lambda: _readback(fn(gb, jnp.uint32(cfg.seed))), deadline)
     (final_assign, n_final, level, q_final,
      mod_h, sw_h, nc_h, dn_h, bad_w) = host
     telemetry.bump("batch.louvain_dispatches")
@@ -309,16 +352,20 @@ def _plp_batch_fn(sig: CapacitySignature, spec: EngineSpec):
 
 def plp_batch(graphs: Sequence[Graph],
               cfg: PLPConfig = PLPConfig(),
-              max_slots: int = MAX_SLOTS) -> List[PLPResult]:
+              max_slots: int = MAX_SLOTS,
+              deadline_s: Optional[float] = None) -> List[PLPResult]:
     """Run PLP over many graphs with one dispatch per capacity bucket —
     ``louvain_batch``'s contract (positional results, per-graph bitwise
     parity with ``plp(g, cfg)``, trivial result for zero-capacity inputs,
-    per-slot RunReport, ``max_slots`` dispatch-width bound) for the
-    label-propagation evaluator."""
+    per-slot RunReport, ``max_slots`` dispatch-width bound,
+    ``deadline_s`` whole-call watchdog) for the label-propagation
+    evaluator."""
     graphs = list(graphs)
     results: List[Optional[PLPResult]] = [None] * len(graphs)
     active_faults = sorted(faultinject.active())
     faults = frozenset(active_faults)
+    deadline = (resilience.Deadline(deadline_s)
+                if deadline_s is not None else None)
 
     buckets: Dict[Tuple, List[int]] = {}
     for i, g in enumerate(graphs):
@@ -333,14 +380,19 @@ def plp_batch(graphs: Sequence[Graph],
 
     for (sig, sorted_by), bucket_idxs in buckets.items():
         for idxs in _chunks(bucket_idxs, max_slots):
+            if deadline is not None and deadline.expired:
+                raise DeadlineError(
+                    f"batch deadline ({deadline_s:.3f}s) expired with "
+                    "bucket dispatches still pending")
             _run_plp_bucket(graphs, idxs, sig, sorted_by, cfg, faults,
-                            active_faults, results)
+                            active_faults, results, deadline)
     return results  # type: ignore[return-value]
 
 
 def _run_plp_bucket(graphs, idxs, sig: CapacitySignature, sorted_by,
                     cfg: PLPConfig, faults: frozenset, active_faults,
-                    results) -> None:
+                    results, deadline: Optional[resilience.Deadline] = None,
+                    ) -> None:
     timer = Timer()
     backend = _resolve_batch_backend(cfg.backend, sorted_by == "src")
     spec = plp_engine_spec(cfg, faults).replace(backend=backend)
@@ -359,8 +411,8 @@ def _run_plp_bucket(graphs, idxs, sig: CapacitySignature, sorted_by,
 
     fn = _plp_batch_fn(sig, spec)
     with timer.phase("move"):
-        labels, s, dn_hist, act_hist = jax.device_get(
-            fn(gb, jnp.uint32(cfg.seed)))
+        labels, s, dn_hist, act_hist = _dispatch_guarded(
+            lambda: jax.device_get(fn(gb, jnp.uint32(cfg.seed))), deadline)
     telemetry.bump("batch.plp_dispatches")
     telemetry.bump("batch.plp_graphs", len(idxs))
 

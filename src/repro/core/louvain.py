@@ -42,7 +42,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import json
 import math
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -56,7 +58,7 @@ from repro.core.modularity import modularity
 from repro.core.progcache import program_cache
 from repro.graph.structure import Graph
 from repro.kernels.common import accum_needs_promotion, pick_ell_width
-from repro.utils import faultinject, telemetry
+from repro.utils import faultinject, resilience, telemetry
 from repro.utils.errors import (CapacityError, CommunityDetectionError,
                                 KernelError, NumericError, RunReport)
 from repro.utils.timing import Timer
@@ -175,6 +177,17 @@ class LouvainConfig(ConfigBase):
     # (the paper-style fig4 phase split used by `benchmarks/run.py
     # level_fusion`).
     per_level_timing: bool = False
+    # Opt-in stage-boundary checkpoint/resume (DESIGN.md §Resilience): at
+    # every cascade stage boundary the carried device state (graph arrays,
+    # assignment chain, history buffers, level counter) is persisted via the
+    # atomic write-then-rename checkpointer (train/checkpoint.py) into this
+    # directory; a killed/preempted run re-invoked with the SAME config and
+    # graph resumes from the last committed boundary, bit-identical to the
+    # uninterrupted run.  Granularity is the stage boundary — a kill inside
+    # a stage replays that stage.  One run per directory; checkpoints are
+    # cleared on successful completion.  None (default) = no checkpointing;
+    # degenerate (single-stage) schedules cross no boundary and never save.
+    checkpoint_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.max_levels < 1:
@@ -550,6 +563,105 @@ def _shrink_fn(n_in: int, m_in: int, n_out: int, m_out: int):
     return jax.jit(f)
 
 
+# ------------------------------------------------- stage checkpoint/resume
+
+
+def _ckpt_fingerprint(cfg: LouvainConfig, g: Graph) -> dict:
+    """Identity of a checkpointable run: the full config (minus the
+    checkpoint location itself) + cheap graph identity (capacities, live
+    counts, masked weight sum).  A restore whose fingerprint mismatches is
+    IGNORED (fresh start + ``louvain.ckpt_mismatch_ignored`` counter) —
+    resuming someone else's state would be a silent wrong answer.  The
+    json round-trip normalizes tuples to lists so the comparison against
+    the manifest-loaded value is exact."""
+    d = cfg.to_dict()
+    d.pop("checkpoint_dir", None)
+    return json.loads(json.dumps({
+        "cfg": d,
+        "graph": {"n_max": int(g.n_max), "m_max": int(g.m_max),
+                  "n_valid": int(g.n_valid), "m_valid": int(g.m_valid),
+                  "w_sum": float(jnp.sum(
+                      jnp.where(g.edge_mask, g.w, 0.0)))}}))
+
+
+def _ckpt_save_stage(ckpt_dir: str, fp: dict, k: int, width: int,
+                     stage_idxs, g_k: Graph, assign, init_com, macro,
+                     level, hists) -> None:
+    """Persist the carried device state at a cascade stage boundary —
+    the post-shrink graph entering stage ``k`` plus the 5 history buffers,
+    the assignment chain and the level counter — via the atomic
+    write-then-rename checkpointer, so a crash mid-save never corrupts
+    the last committed boundary.  The stage-varying scheduler metadata
+    (k, traced-ELL width, stages entered so far) rides the manifest."""
+    from repro.train import checkpoint
+
+    tree = {"graph": list(_graph_arrays(g_k)), "assign": assign,
+            "init_com": init_com, "macro": macro, "level": level,
+            "hists": list(hists)}
+    meta = {"fingerprint": fp,
+            "stage": {"k": int(k), "width": int(width),
+                      "stage_idxs": [int(j) for j in stage_idxs]}}
+    checkpoint.save(ckpt_dir, len(stage_idxs), tree,
+                    config_json=json.dumps(meta), keep=2)
+    telemetry.bump("louvain.ckpt_save")
+
+
+def _ckpt_try_resume(cfg: LouvainConfig, caps, n0: int, fp: dict):
+    """Restore the latest committed stage boundary, or None (no/stale/
+    mismatched checkpoint → start fresh)."""
+    from repro.train import checkpoint
+
+    ckpt_dir = cfg.checkpoint_dir
+    step = checkpoint.latest_step(ckpt_dir)
+    if step is None:
+        return None
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                           "manifest.json")) as f:
+        meta = json.load(f)["config"]
+    if meta.get("fingerprint") != fp:
+        telemetry.bump("louvain.ckpt_mismatch_ignored")
+        return None
+    stage = meta["stage"]
+    k, width = int(stage["k"]), int(stage["width"])
+    stage_idxs = [int(j) for j in stage["stage_idxs"]]
+    if not 0 < k < len(caps):
+        telemetry.bump("louvain.ckpt_mismatch_ignored")
+        return None
+    n_k, m_k = caps[k]
+    sds = jax.ShapeDtypeStruct
+    like = {"graph": [sds((m_k,), jnp.int32), sds((m_k,), jnp.int32),
+                      sds((m_k,), jnp.float32), sds((m_k,), jnp.bool_),
+                      sds((), jnp.int32), sds((), jnp.int32)],
+            "assign": sds((n0,), jnp.int32),
+            "init_com": sds((n_k,), jnp.int32),
+            "macro": sds((n0,), jnp.int32),
+            "level": sds((), jnp.int32),
+            "hists": [sds((cfg.max_levels,), jnp.float32),
+                      sds((cfg.max_levels,), jnp.int32),
+                      sds((cfg.max_levels,), jnp.int32),
+                      sds((cfg.max_levels, cfg.max_sweeps), jnp.int32),
+                      sds((), jnp.bool_)]}
+    tree = checkpoint.restore(ckpt_dir, step, like)
+    src, dst, w, em, nv, mv = tree["graph"]
+    g_k = Graph(src=src, dst=dst, w=w, edge_mask=em, n_valid=nv,
+                m_valid=mv, n_max=n_k, m_max=m_k, sorted_by="src")
+    return (k, width, stage_idxs, g_k, tree["assign"], tree["init_com"],
+            tree["macro"], tree["level"], tuple(tree["hists"]))
+
+
+def _ckpt_clear(ckpt_dir: str) -> None:
+    """Drop committed stage checkpoints after a successful run: the next
+    run in this directory starts fresh instead of resuming a finished
+    cascade's tail."""
+    import shutil
+
+    from repro.train import checkpoint
+
+    for s in checkpoint.all_steps(ckpt_dir):
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
 def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
                       g_original: Optional[Graph],
                       faults: frozenset = frozenset(),
@@ -566,13 +678,6 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
     spec0 = engine_spec(cfg, faults=faults)
     refine_spec = _refine_spec(cfg, faults) if cfg.refine else None
 
-    ell = None
-    if cfg.backend in ("ell", "pallas"):
-        from repro.graph import ell as ell_mod
-
-        with timer.phase("ell_build"):
-            ell = ell_mod.build_device_ell(g)
-
     n0 = g.n_max
     arange0 = jnp.arange(n0, dtype=jnp.int32)
     hists = (jnp.full((cfg.max_levels,), jnp.nan, jnp.float32),
@@ -581,14 +686,35 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
              jnp.full((cfg.max_levels, cfg.max_sweeps), -1, jnp.int32),
              jnp.bool_(False))
     seed_a = jnp.uint32(cfg.seed)
-    stages: list = []
+
+    k = 0
+    width = pick_ell_width(None, *caps[0])
+    g_k = g
+    assign, init_com, macro = arange0, arange0, arange0
+    level = jnp.int32(0)
+    stage_idxs: list = []
+
+    # Stage-boundary checkpointing only has boundaries to commit when the
+    # schedule cascades; a degenerate schedule is a single dispatch.
+    ckpt_fp = None
+    if cfg.checkpoint_dir and cascade:
+        ckpt_fp = _ckpt_fingerprint(cfg, g)
+        resumed = _ckpt_try_resume(cfg, caps, n0, ckpt_fp)
+        if resumed is not None:
+            (k, width, stage_idxs, g_k, assign, init_com, macro, level,
+             hists) = resumed
+            telemetry.bump("louvain.ckpt_resume")
+
+    ell_k = None
+    if k == 0 and cfg.backend in ("ell", "pallas"):
+        # resumed stages (k > 0) re-bucket via the traced per-stage ELL
+        # path, same as post-shrink stages — no host build needed
+        from repro.graph import ell as ell_mod
+
+        with timer.phase("ell_build"):
+            ell_k = ell_mod.build_device_ell(g)
 
     with timer.phase("pipeline"):
-        k = 0
-        width = pick_ell_width(None, *caps[0])
-        g_k, ell_k = g, ell
-        assign, init_com, macro = arange0, arange0, arange0
-        level = jnp.int32(0)
         while True:
             fn = _stage_fn(spec0 if k == 0 else None,
                            _cascade_coarse_spec(cfg, cascade, width, faults),
@@ -599,7 +725,7 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
              max_deg, final_assign, n_final, q_final) = fn(
                 g_k, ell_k, g0, seed_a, assign, init_com, macro, level,
                 hists)
-            stages.append(caps[k])
+            stage_idxs.append(k)
             if k + 1 >= len(caps):
                 break
             done_h, level_h, nv_h, mv_h, max_deg_h = _stage_sync(
@@ -626,6 +752,16 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
             ell_k = None
             k = k2
             width = pick_ell_width(max_deg_h, *caps[k])
+            if ckpt_fp is not None:
+                _ckpt_save_stage(cfg.checkpoint_dir, ckpt_fp, k, width,
+                                 stage_idxs, g_k, assign, init_com, macro,
+                                 level, hists)
+            if faultinject.consume("preempt_stage"):
+                # AFTER the checkpoint committed: models a kill between
+                # stages, the worst-case window the resume path must cover
+                raise resilience.Preempted(
+                    "injected preemption at cascade stage boundary "
+                    f"(entering stage k={k})")
 
         out = _readback((final_assign, n_final, level, q_final) + hists)
     (final_assign, n_final, levels, q, mod_hist, sweeps_hist, ncomm_hist,
@@ -636,6 +772,8 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
         # refuse the answer rather than return a silently-poisoned partition
         raise NumericError(
             "non-finite edge weight detected inside the fused level loop")
+    if ckpt_fp is not None:
+        _ckpt_clear(cfg.checkpoint_dir)
     levels = int(levels)
     sweeps_per_level = [int(s) for s in sweeps_hist[:levels]]
     return LouvainResult(
@@ -652,7 +790,7 @@ def _louvain_pipeline(g: Graph, cfg: LouvainConfig,
         delta_n_per_level=[
             [int(x) for x in row[:s]]
             for row, s in zip(dn_hist[:levels], sweeps_per_level)],
-        cascade_stages=stages,
+        cascade_stages=[caps[j] for j in stage_idxs],
     )
 
 

@@ -100,3 +100,18 @@ class NumericError(CommunityDetectionError):
 class ShardError(CommunityDetectionError):
     """The distributed edge partition lost coverage (a dropped or corrupted
     shard): the per-shard edge counts no longer cover the graph."""
+
+
+class DeadlineError(CommunityDetectionError):
+    """A dispatch (or a whole request) overran its deadline and was
+    cancelled by the watchdog (``utils.resilience.call_with_deadline``).
+    NOT retryable: the time budget is spent — retrying can only miss
+    harder.  The abandoned work may still complete in the background; the
+    contract is only that the CALLER is released on time."""
+
+
+class OverloadError(CommunityDetectionError):
+    """Admission control shed this request: the serving queue is at its
+    configured depth/cost bound (DESIGN.md §Resilience).  The typed
+    backpressure signal — clients should back off and resubmit; retrying
+    immediately on the same engine will meet the same bound."""

@@ -19,6 +19,7 @@ from typing import Dict
 
 _lock = threading.Lock()
 _counters: Dict[str, int] = {}
+_values: Dict[str, Dict[str, float]] = {}
 
 
 def bump(name: str, k: int = 1) -> None:
@@ -31,6 +32,30 @@ def get(name: str) -> int:
         return _counters.get(name, 0)
 
 
+def observe(name: str, value: float) -> None:
+    """Record one sample of a host-side measurement (latency, backoff sleep,
+    breaker-open duration, …) into a cheap running aggregate —
+    count/sum/min/max/last, no per-sample storage.  Same host-only
+    discipline as ``bump``: never called from inside a compiled program."""
+    v = float(value)
+    with _lock:
+        agg = _values.get(name)
+        if agg is None:
+            _values[name] = {"count": 1, "sum": v, "min": v, "max": v,
+                             "last": v}
+        else:
+            agg["count"] += 1
+            agg["sum"] += v
+            agg["min"] = min(agg["min"], v)
+            agg["max"] = max(agg["max"], v)
+            agg["last"] = v
+
+
+def values() -> Dict[str, Dict[str, float]]:
+    with _lock:
+        return {k: dict(v) for k, v in _values.items()}
+
+
 def snapshot() -> Dict[str, int]:
     with _lock:
         return dict(_counters)
@@ -39,3 +64,4 @@ def snapshot() -> Dict[str, int]:
 def reset() -> None:
     with _lock:
         _counters.clear()
+        _values.clear()

@@ -1,0 +1,89 @@
+"""Chaos harness (DESIGN.md §Resilience, ISSUE 9 acceptance).
+
+Drive the serving engine end-to-end under EVERY registered fault point and
+enforce the service contract: a typed response for every accepted request —
+result or taxonomy error — never a hang (an in-test watchdog bounds the
+flush) and never a dropped response.  Faults that poison answers must come
+back as typed errors; faults with a lossless fallback must come back
+bit-identical ``ok`` results (the per-fault suites in ``test_faults.py``
+pin WHICH; here we pin "always answered, never deadlocked").
+"""
+import numpy as np
+import pytest
+
+from launch.community_serve import CommunityRequest, CommunityServeEngine
+from repro.graph.generators import sbm
+from repro.utils import faultinject, resilience
+
+#: generous wall-clock bound for one flush under faults: recompiles ride the
+#: fault-set cache key, so the first faulted flush pays a fresh trace
+FLUSH_DEADLINE_S = 300.0
+
+
+def _traffic(eng, count=4, deadline_ms=None):
+    accepted = []
+    for i in range(count):
+        n = 24 if i % 2 else 48
+        u, v, _w, _t = sbm(n, 3, p_in=0.35, p_out=0.03, seed=40 + i)
+        req = CommunityRequest(request_id=f"c{i}", u=u, v=v, n=n,
+                               algo="plp" if i == 3 else "louvain",
+                               deadline_ms=deadline_ms)
+        if eng.submit(req) is None:
+            accepted.append(req.request_id)
+    return accepted
+
+
+@pytest.mark.parametrize("fault", faultinject.FAULT_POINTS)
+def test_service_answers_everything_under_fault(fault):
+    eng = CommunityServeEngine(max_retries=1, backoff_base_s=0.01)
+    with faultinject.inject(fault):
+        accepted = _traffic(eng)
+        responses = resilience.call_with_deadline(eng.flush,
+                                                  FLUSH_DEADLINE_S)
+    assert {r.request_id for r in responses} == set(accepted)
+    for r in responses:
+        # the contract: a result or a TYPED error, never silence
+        if r.ok:
+            assert r.labels is not None
+        else:
+            assert r.error and r.error.split(":")[0].endswith("Error")
+    # the engine survives: a clean follow-up flush serves normally
+    accepted2 = _traffic(eng, count=2)
+    responses2 = resilience.call_with_deadline(eng.flush, FLUSH_DEADLINE_S)
+    assert {r.request_id for r in responses2} == set(accepted2)
+    assert all(r.ok for r in responses2)
+
+
+def test_service_answers_everything_under_paired_faults():
+    """Correlated chaos: a stalled dispatch AND transient failures at once
+    still drain the queue with typed outcomes."""
+    eng = CommunityServeEngine(max_retries=1, backoff_base_s=0.01)
+    with faultinject.inject("slow_dispatch", "transient_batch_fail"):
+        faultinject.set_rate("transient_batch_fail", 0.5)
+        try:
+            accepted = _traffic(eng)
+            responses = resilience.call_with_deadline(eng.flush,
+                                                      FLUSH_DEADLINE_S)
+        finally:
+            faultinject.disarm("transient_batch_fail", "slow_dispatch")
+    assert {r.request_id for r in responses} == set(accepted)
+    assert all(r.ok or r.error for r in responses)
+
+
+def test_deadlined_traffic_under_stall_is_split_not_hung(monkeypatch):
+    """A hung dispatch with per-request deadlines: the watchdog releases
+    the flush on time and every request gets a typed DeadlineError —
+    the service never blocks on the stalled device work."""
+    monkeypatch.setenv(faultinject.SLOW_DISPATCH_ENV, "30.0")
+    eng = CommunityServeEngine(max_retries=0)
+    with faultinject.inject("slow_dispatch"):
+        accepted = _traffic(eng, count=2, deadline_ms=500.0)
+        responses = resilience.call_with_deadline(eng.flush, 60.0)
+    assert {r.request_id for r in responses} == set(accepted)
+    assert all(not r.ok and "DeadlineError" in r.error for r in responses)
+
+
+def test_smoke_entrypoint_is_clean():
+    from launch.community_serve import _smoke
+
+    assert _smoke(n_requests=4, deadline_ms=60000.0) == 0

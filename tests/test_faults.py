@@ -68,6 +68,69 @@ class TestRegistry:
             EngineSpec(evaluator="plp", backend="segment",
                        faults=("not_a_fault",))
 
+    def test_nested_inject_each_level_restores_what_it_saw(self):
+        with faultinject.inject("nan_weight"):
+            with faultinject.inject("oscillation", "vmem_starve"):
+                assert faultinject.active() == {
+                    "nan_weight", "oscillation", "vmem_starve"}
+                # re-arming an already-armed point nests harmlessly
+                with faultinject.inject("nan_weight"):
+                    assert "nan_weight" in faultinject.active()
+                assert "nan_weight" in faultinject.active()
+            assert faultinject.active() == {"nan_weight"}
+        assert faultinject.active() == frozenset()
+
+    def test_nested_inject_restores_through_exceptions(self):
+        with faultinject.inject("nan_weight"):
+            with pytest.raises(RuntimeError):
+                with faultinject.inject("oscillation"):
+                    raise RuntimeError("boom")
+            assert faultinject.active() == {"nan_weight"}
+        assert faultinject.active() == frozenset()
+
+    def test_bare_disarm_restores_env_baseline(self, monkeypatch):
+        """A test's bare ``disarm()`` must not switch off the faults a CI
+        chaos step configured for the whole process via REPRO_FAULTS."""
+        monkeypatch.setenv(faultinject.FAULT_ENV, "oscillation,nan_weight")
+        faultinject.arm("vmem_starve")
+        faultinject.disarm()
+        assert faultinject.active() == {"oscillation", "nan_weight"}
+        monkeypatch.delenv(faultinject.FAULT_ENV)
+        faultinject.disarm()
+        assert faultinject.active() == frozenset()
+
+    def test_rate_schedule_is_bresenham_exact(self):
+        faultinject.arm("transient_batch_fail")
+        faultinject.set_rate("transient_batch_fail", 0.25)
+        fires = [faultinject.should_fire("transient_batch_fail")
+                 for _ in range(20)]
+        assert sum(fires) == 5          # exactly ⌊20 · 0.25⌋, no RNG
+        assert fires == fires[:4] * 5   # periodic: every 4th query
+        faultinject.disarm()
+        assert not faultinject.should_fire("transient_batch_fail")
+
+    def test_burst_turns_one_fire_into_consecutive_fires(self):
+        faultinject.arm("transient_batch_fail")
+        faultinject.set_rate("transient_batch_fail", 0.2)
+        faultinject.set_burst("transient_batch_fail", 3)
+        fires = [faultinject.should_fire("transient_batch_fail")
+                 for _ in range(10)]
+        assert fires == [False] * 4 + [True] * 3 + [False] * 3
+        faultinject.disarm()
+
+    def test_fuel_bounds_total_fires(self):
+        faultinject.arm("slow_dispatch")
+        faultinject.set_fuel("slow_dispatch", 2)
+        fires = [faultinject.should_fire("slow_dispatch") for _ in range(5)]
+        assert fires == [True, True, False, False, False]
+        faultinject.disarm()
+
+    def test_consume_fires_once_then_self_disarms(self):
+        faultinject.arm("preempt_stage")
+        assert faultinject.consume("preempt_stage")
+        assert not faultinject.is_active("preempt_stage")
+        assert not faultinject.consume("preempt_stage")
+
 
 # ------------------------------------------------------- typed-error faults
 

@@ -1,0 +1,396 @@
+"""Resilience layer (DESIGN.md §Resilience).
+
+Units for the primitives in ``repro.utils.resilience`` (deadlines/watchdog,
+backoff, retryability over the PR-7 taxonomy, circuit breaker), then the
+serving integrations: deadline misses fail ONLY the offending requests,
+admission control sheds with typed ``OverloadError``, transient batch
+failures retry-with-backoff to success, breakers trip/route/probe/close,
+and a mid-cascade kill resumes from the stage checkpoint bit-identically.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from launch.community_serve import (CommunityRequest, CommunityServeEngine,
+                                    _estimate_cost)
+from repro.core.louvain import LouvainConfig, louvain
+from repro.graph.builders import from_numpy_edges
+from repro.graph.generators import sbm
+from repro.utils import faultinject, resilience, telemetry
+from repro.utils.errors import (CapacityError, DeadlineError, KernelError,
+                                NumericError, OverloadError)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------------------------ deadlines
+
+
+class TestDeadline:
+    def test_remaining_and_expiry_follow_the_clock(self):
+        clk = FakeClock()
+        d = resilience.Deadline(1.5, clock=clk)
+        assert d.remaining_s() == pytest.approx(1.5)
+        clk.advance(1.0)
+        assert d.remaining_s() == pytest.approx(0.5)
+        assert not d.expired
+        clk.advance(0.6)
+        assert d.expired
+
+    def test_min_remaining_skips_none_members(self):
+        clk = FakeClock()
+        a = resilience.Deadline(2.0, clock=clk)
+        b = resilience.Deadline(0.7, clock=clk)
+        assert resilience.min_remaining_s([a, None, b]) == pytest.approx(0.7)
+        assert resilience.min_remaining_s([None, None]) is None
+        assert resilience.min_remaining_s([]) is None
+
+    def test_call_inline_when_no_deadline(self):
+        assert resilience.call_with_deadline(lambda: 41 + 1, None) == 42
+
+    def test_preflight_expired_never_dispatches(self):
+        calls = []
+        with pytest.raises(DeadlineError, match="already expired"):
+            resilience.call_with_deadline(lambda: calls.append(1), -0.1)
+        assert not calls
+
+    def test_watchdog_cancels_a_hung_call(self):
+        telemetry.reset()
+        t0 = time.perf_counter()
+        with pytest.raises(DeadlineError, match="watchdog"):
+            resilience.call_with_deadline(lambda: time.sleep(5.0), 0.1)
+        assert time.perf_counter() - t0 < 2.0   # released on time, not at 5s
+        assert telemetry.get("resilience.watchdog_fired") == 1
+
+    def test_result_and_exception_relay(self):
+        assert resilience.call_with_deadline(lambda: "ok", 5.0) == "ok"
+
+        def boom():
+            raise NumericError("typed boom")
+
+        with pytest.raises(NumericError, match="typed boom"):
+            resilience.call_with_deadline(boom, 5.0)
+
+        def killed():
+            raise resilience.Preempted("kill relays too")
+
+        with pytest.raises(resilience.Preempted):
+            resilience.call_with_deadline(killed, 5.0)
+
+
+# -------------------------------------------------------------------- retries
+
+
+class TestBackoffAndRetryability:
+    def test_backoff_is_deterministic_and_bounded(self):
+        a = list(resilience.backoff_delays(6, base_s=0.1, max_s=0.5, seed=7))
+        b = list(resilience.backoff_delays(6, base_s=0.1, max_s=0.5, seed=7))
+        assert a == b
+        assert all(d <= 0.5 * 1.5 for d in a)       # max_s · (1 + jitter)
+        assert all(d >= 0.05 for d in a)            # base · (1 - jitter)
+        assert a != list(resilience.backoff_delays(6, base_s=0.1, max_s=0.5,
+                                                   seed=8))
+
+    def test_backoff_rejects_degenerate_jitter(self):
+        with pytest.raises(ValueError, match="jitter"):
+            list(resilience.backoff_delays(2, jitter=1.0))
+
+    def test_retryability_follows_the_taxonomy(self):
+        assert resilience.is_retryable(KernelError("transient infra"))
+        assert resilience.is_retryable(RuntimeError("infra surprise"))
+        assert not resilience.is_retryable(NumericError("unsafe answer"))
+        assert not resilience.is_retryable(CapacityError("won't fit again"))
+        assert not resilience.is_retryable(DeadlineError("budget spent"))
+        assert not resilience.is_retryable(OverloadError("shed"))
+        assert not resilience.is_retryable(resilience.Preempted("kill"))
+        assert not resilience.is_retryable(KeyboardInterrupt())
+
+
+# ------------------------------------------------------------ circuit breaker
+
+
+class TestCircuitBreaker:
+    def test_trips_at_threshold_and_probes_back(self):
+        telemetry.reset()
+        clk = FakeClock()
+        br = resilience.CircuitBreaker(threshold=3, reset_after_s=10.0,
+                                       name="t", clock=clk)
+        assert br.state("sig") == "closed"
+        br.record_failure("sig")
+        br.record_failure("sig")
+        assert br.state("sig") == "closed"
+        br.record_failure("sig")
+        assert br.state("sig") == "open"
+        assert telemetry.get("t.breaker_trip") == 1
+        clk.advance(9.0)
+        assert br.state("sig") == "open"
+        clk.advance(1.5)
+        assert br.state("sig") == "half_open"
+        br.record_success("sig")                    # probe succeeded
+        assert br.state("sig") == "closed"
+        assert telemetry.get("t.breaker_close") == 1
+        assert telemetry.values()["t.breaker_open_s"]["last"] \
+            == pytest.approx(10.5)
+
+    def test_failed_probe_reopens_for_a_full_window(self):
+        telemetry.reset()
+        clk = FakeClock()
+        br = resilience.CircuitBreaker(threshold=1, reset_after_s=5.0,
+                                       name="t2", clock=clk)
+        br.record_failure("k")
+        assert br.state("k") == "open"
+        clk.advance(5.1)
+        assert br.state("k") == "half_open"
+        br.record_failure("k")                      # probe failed
+        assert br.state("k") == "open"
+        clk.advance(4.9)
+        assert br.state("k") == "open"              # fresh full window
+        assert telemetry.get("t2.breaker_trip") == 2
+
+    def test_success_resets_the_consecutive_count(self):
+        br = resilience.CircuitBreaker(threshold=2, name="t3")
+        br.record_failure("k")
+        br.record_success("k")
+        br.record_failure("k")
+        assert br.state("k") == "closed"            # never 2 consecutive
+        assert br.snapshot()["'k'"]["failures"] == 1
+
+    def test_keys_are_independent(self):
+        br = resilience.CircuitBreaker(threshold=1, name="t4")
+        br.record_failure("bad")
+        assert br.state("bad") == "open"
+        assert br.state("good") == "closed"
+
+
+# --------------------------------------------------------- serve integrations
+
+
+def _reqs(count, n=40, seed0=500, deadline_ms=None, algo="louvain"):
+    out = []
+    for i in range(count):
+        u, v, _w, _t = sbm(n, 4, p_in=0.3, p_out=0.02, seed=seed0 + i)
+        out.append(CommunityRequest(request_id=f"q{i}", u=u, v=v, n=n,
+                                    algo=algo, deadline_ms=deadline_ms))
+    return out
+
+
+class TestServeResilience:
+    def test_admission_sheds_on_depth_with_typed_overload(self):
+        telemetry.reset()
+        eng = CommunityServeEngine(max_queue_depth=2)
+        accepted = [eng.submit(r) for r in _reqs(2)]
+        assert accepted == [None, None]
+        shed = eng.submit(_reqs(1, seed0=900)[0])
+        assert shed is not None and not shed.ok
+        assert "OverloadError" in shed.error and "depth" in shed.error
+        assert eng.pending() == 2
+        assert eng.stats()["shed"] == 1
+        # the queued traffic still gets served
+        assert all(r.ok for r in eng.flush())
+
+    def test_admission_sheds_on_estimated_cost(self):
+        reqs = _reqs(3)
+        cost1 = _estimate_cost(reqs[0])
+        eng = CommunityServeEngine(max_queue_cost=2 * cost1)
+        assert eng.submit(reqs[0]) is None
+        assert eng.submit(reqs[1]) is None
+        shed = eng.submit(reqs[2])
+        assert shed is not None and "OverloadError" in shed.error
+        assert eng.stats()["queued_cost"] == 2 * cost1
+        eng.flush()
+        assert eng.stats()["queued_cost"] == 0
+
+    def test_deadline_miss_fails_only_with_typed_error(self, monkeypatch):
+        monkeypatch.setenv(faultinject.SLOW_DISPATCH_ENV, "3.0")
+        eng = CommunityServeEngine(max_retries=0)
+        for r in _reqs(2, deadline_ms=400.0):
+            eng.submit(r)
+        with faultinject.inject("slow_dispatch"):
+            resp = eng.flush()
+        assert len(resp) == 2
+        for r in resp:
+            assert not r.ok and "DeadlineError" in r.error
+            assert r.report is not None
+        assert eng.stats()["counters"].get(
+            "resilience.watchdog_fired", 0) >= 1
+
+    def test_expired_while_queued_fails_before_dispatching(self):
+        eng = CommunityServeEngine()
+        for r in _reqs(1, deadline_ms=0.5):
+            eng.submit(r)
+        time.sleep(0.01)
+        dispatches0 = eng.stats()["dispatches"]
+        resp = eng.flush()
+        assert not resp[0].ok and "DeadlineError" in resp[0].error
+        # the group dispatch ran but never reached the batch engine
+        assert eng.stats()["dispatches"] == dispatches0 + 1
+        assert eng.stats()["counters"].get(
+            "serve.deadline_expired_queued", 0) >= 1
+
+    def test_transient_batch_failure_retries_to_success(self):
+        telemetry.reset()
+        eng = CommunityServeEngine(max_retries=2, backoff_base_s=0.01)
+        for r in _reqs(2):
+            eng.submit(r)
+        faultinject.arm("transient_batch_fail")
+        faultinject.set_fuel("transient_batch_fail", 1)   # one-shot fault
+        try:
+            resp = eng.flush()
+        finally:
+            faultinject.disarm()
+        assert all(r.ok for r in resp)
+        c = eng.stats()["counters"]
+        assert c.get("serve.retry", 0) == 1
+        # absorbed by retry: no sequential fallback, breaker stays closed
+        assert c.get("serve.batch_fallback_sequential", 0) == 0
+        assert all(b["state"] == "closed"
+                   for b in eng.stats()["breakers"].values())
+
+    def test_breaker_trips_routes_sequential_and_probes_back(self):
+        telemetry.reset()
+        clk = FakeClock()
+        br = resilience.CircuitBreaker(threshold=2, reset_after_s=30.0,
+                                       name="serve", clock=clk)
+        eng = CommunityServeEngine(max_retries=0, breaker=br)
+        reqs = _reqs(6, seed0=700)
+
+        faultinject.arm("transient_batch_fail")
+        try:
+            # two consecutive failing flushes of the same signature trip it;
+            # the sequential fallback still answers every request
+            for r in reqs[:2]:
+                eng.submit(r)
+            assert all(r.ok for r in eng.flush())
+            for r in reqs[2:3]:
+                eng.submit(r)
+            assert all(r.ok for r in eng.flush())
+            key = next(iter(eng.stats()["breakers"]))
+            assert eng.stats()["breakers"][key]["state"] == "open"
+
+            # OPEN: a request for the poisoned signature is rejected at the
+            # door — no queue slot, and the breaker is not touched further
+            trips0 = telemetry.get("serve.breaker_trip")
+            door = eng.submit(reqs[3])
+            assert door is not None and not door.ok
+            assert "OverloadError" in door.error and "breaker" in door.error
+            assert eng.pending() == 0
+            assert telemetry.get("serve.breaker_trip") == trips0
+            assert telemetry.get("serve.breaker_reject") == 1
+
+            # HALF-OPEN after the window: traffic is admitted again; with
+            # the fault still armed the probe fails and re-opens
+            clk.advance(31.0)
+            assert eng.submit(reqs[4]) is None
+            assert all(r.ok for r in eng.flush())   # sequential fallback
+            assert eng.stats()["breakers"][key]["state"] == "open"
+        finally:
+            faultinject.disarm()
+
+        # fault gone: the next half-open probe succeeds and closes it
+        clk.advance(31.0)
+        assert eng.submit(reqs[5]) is None
+        assert all(r.ok for r in eng.flush())
+        assert eng.stats()["breakers"][key]["state"] == "closed"
+        assert telemetry.get("serve.breaker_close") == 1
+
+    def test_open_breaker_routes_queued_members_around_batched_path(self):
+        """A member queued BEFORE its signature's breaker tripped (the
+        door can't have seen it) is served via the sequential ladder, and
+        its outcome feeds the breaker nothing."""
+        from repro.kernels.common import capacity_signature
+
+        telemetry.reset()
+        br = resilience.CircuitBreaker(threshold=1, reset_after_s=1e9,
+                                       name="serve")
+        eng = CommunityServeEngine(max_retries=0, breaker=br)
+        req = _reqs(1, seed0=760)[0]
+        assert eng.submit(req) is None
+        q = eng._queue[0]
+        key = ("louvain",
+               tuple(capacity_signature(q.graph.n_max, q.graph.m_max)))
+        br.record_failure(key)                      # trips between ticks
+        assert br.state(key) == "open"
+        resp = eng.flush()
+        assert resp[0].ok
+        assert telemetry.get("serve.breaker_routed_sequential") == 1
+        assert br.state(key) == "open"              # success didn't feed it
+        assert br.snapshot()[repr(key)]["failures"] == 1
+
+
+# ------------------------------------------------- checkpoint/resume (kill)
+
+
+def _ring_of_cliques(n=600, k=20):
+    edges = []
+    for c in range(n // k):
+        base = c * k
+        for i in range(k):
+            for j in range(i + 1, k):
+                edges.append((base + i, base + j))
+        edges.append((base, ((c + 1) % (n // k)) * k))
+    e = np.array(edges, np.int64)
+    return from_numpy_edges(e[:, 0], e[:, 1], n=n)
+
+
+class TestCheckpointResume:
+    def test_mid_cascade_kill_resumes_bit_identical(self, tmp_path):
+        g = _ring_of_cliques()
+        cfg = LouvainConfig(capacity_schedule=((256, 2048),),
+                            backend="segment")
+        oracle = louvain(g, cfg)
+        assert len(oracle.cascade_stages) == 2  # the kill window exists
+
+        telemetry.reset()
+        cfg_ck = cfg.replace(checkpoint_dir=str(tmp_path))
+        with pytest.raises(resilience.Preempted):
+            with faultinject.inject("preempt_stage"):
+                louvain(g, cfg_ck)
+        # the stage boundary committed before the kill
+        assert any(p.startswith("step_") for p in os.listdir(tmp_path))
+        assert telemetry.get("louvain.ckpt_save") == 1
+
+        resumed = louvain(g, cfg_ck)
+        assert telemetry.get("louvain.ckpt_resume") == 1
+        assert np.array_equal(resumed.labels, oracle.labels)
+        assert resumed.modularity == oracle.modularity
+        assert resumed.modularity_history == oracle.modularity_history
+        assert resumed.n_communities == oracle.n_communities
+        assert resumed.sweeps_per_level == oracle.sweeps_per_level
+        assert resumed.cascade_stages == oracle.cascade_stages
+        # success clears the committed boundaries: next run starts fresh
+        assert not any(p.startswith("step_") for p in os.listdir(tmp_path))
+
+    def test_mismatched_fingerprint_is_ignored_not_resumed(self, tmp_path):
+        g = _ring_of_cliques()
+        cfg = LouvainConfig(capacity_schedule=((256, 2048),),
+                            backend="segment",
+                            checkpoint_dir=str(tmp_path))
+        with pytest.raises(resilience.Preempted):
+            with faultinject.inject("preempt_stage"):
+                louvain(g, cfg)
+        telemetry.reset()
+        # a different config must NOT resume someone else's stage state
+        other = louvain(g, cfg.replace(seed=cfg.seed + 1))
+        assert telemetry.get("louvain.ckpt_mismatch_ignored") == 1
+        assert telemetry.get("louvain.ckpt_resume") == 0
+        assert other.run_report.clean
+
+    def test_clean_run_with_checkpoint_dir_leaves_no_debris(self, tmp_path):
+        g = _ring_of_cliques()
+        cfg = LouvainConfig(capacity_schedule=((256, 2048),),
+                            backend="segment",
+                            checkpoint_dir=str(tmp_path))
+        res = louvain(g, cfg)
+        assert res.run_report.clean
+        assert not any(p.startswith("step_") for p in os.listdir(tmp_path))
