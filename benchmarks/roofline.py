@@ -22,6 +22,14 @@ bytes-moved model of the sort-free binned path is priced against the
 floor the measured binned time achieves — the memory-roofline view of
 the aggregation phase.  Writes roofline_aggregation.{json,md}.
 
+Also ingests the distributed scale-out artifact (BENCH_dist_scale.json,
+benchmarks/run.py `dist_scale` mode): per device count, the per-level
+collective payload of the shard-local pipeline (halo label stripes +
+gathered partial coarse groups, both the analytic model and the measured
+bytes) is priced against the 50 GB/s ICI term and compared with the
+replicated all_gather baseline's O(m) payload — the communication-roofline
+view of coarsening.  Writes roofline_dist_comm.{json,md}.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
 Writes benchmarks/artifacts/roofline_<mesh>.{json,md}.
 """
@@ -197,6 +205,69 @@ def render_aggregation_md(rows) -> str:
     return "\n".join(lines)
 
 
+def dist_comm_rows():
+    """Ingest BENCH_dist_scale[_smoke].json -> per-device-count ICI rows.
+
+    Prices each level's collective payload over the 50 GB/s ICI term:
+    the replicated all_gather baseline ships the whole padded edge list
+    (D * m_pad records) every level, while the shard-local pipeline ships
+    only the contiguization stripes (halo labels) plus the gathered partial
+    coarse groups — O(boundary + communities).  ``measured_*`` uses the
+    actual per-level byte counter from DistLouvainResult.comm_stats.
+    """
+    path = os.path.join(ART, "BENCH_dist_scale.json")
+    if not os.path.exists(path):
+        path = os.path.join(ART, "BENCH_dist_scale_smoke.json")
+    if not os.path.exists(path):
+        return []
+    rows = []
+    for rec in json.load(open(path)):
+        model = rec["comm_bytes_model"]
+        actual = rec["actual_bytes_per_level"]
+        levels = max(1, len(actual))
+        meas = sum(actual)
+        repl_total = model["replicated"] * levels
+        rows.append({
+            "graph": rec["graph"], "devices": rec["devices"],
+            "levels": levels,
+            "m_pad": rec["m_pad"], "halo_cap": rec["halo_cap"],
+            "halo_labels": rec["halo_labels"],
+            "replicated_bytes_per_level": model["replicated"],
+            "shard_local_bytes_per_level": model["shard_local"],
+            "measured_bytes_per_level": actual,
+            "measured_total_bytes": meas,
+            "ici_s_replicated": repl_total / ICI_BW,
+            "ici_s_shard_local_model": model["shard_local"] * levels / ICI_BW,
+            "ici_s_measured": meas / ICI_BW,
+            "payload_reduction":
+                repl_total / meas if meas else None,
+        })
+    return rows
+
+
+def render_dist_comm_md(rows) -> str:
+    lines = [
+        "### Distributed comm roofline — per-level collective payload vs "
+        f"the {ICI_BW / 1e9:.0f} GB/s ICI term",
+        "",
+        "| graph | D | levels | m_pad | halo cap | repl B/level | "
+        "shard B/level (model) | measured B total | ICI s repl | "
+        "ICI s measured | payload reduction |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        red = r["payload_reduction"]
+        lines.append(
+            f"| {r['graph']} | {r['devices']} | {r['levels']} | "
+            f"{r['m_pad']} | {r['halo_cap']} | "
+            f"{r['replicated_bytes_per_level']:,} | "
+            f"{r['shard_local_bytes_per_level']:,} | "
+            f"{r['measured_total_bytes']:,} | "
+            f"{r['ici_s_replicated']:.3g} | {r['ici_s_measured']:.3g} | "
+            f"{red and f'{red:.1f}x' or 'n/a'} |")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
@@ -231,6 +302,16 @@ def main(argv=None):
         print()
         print(amd)
     all_rows["aggregation"] = agg
+    dist = dist_comm_rows()
+    if dist:
+        dmd = render_dist_comm_md(dist)
+        with open(os.path.join(ART, "roofline_dist_comm.json"), "w") as f:
+            json.dump(dist, f, indent=1)
+        with open(os.path.join(ART, "roofline_dist_comm.md"), "w") as f:
+            f.write(dmd)
+        print()
+        print(dmd)
+    all_rows["dist_comm"] = dist
     return all_rows
 
 

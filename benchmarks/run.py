@@ -33,6 +33,12 @@
             transient dispatch faults: throughput/p99, shed-rate, retry
             absorption, breaker trips and recovery time
             (artifact: BENCH_serve_resilience.json)
+  dist_scale — shard-local coarsening scale-out on 1/2/4/8 emulated
+            devices: bit-identical check vs the replicated oracle and the
+            local fused driver, comm-bytes counter (halo labels + gathered
+            partial groups vs the replicated all_gather baseline), the
+            Fig.-4-style phase split and per-device aggregation-work trend
+            (artifact: BENCH_dist_scale.json)
   roofline— §Roofline tables from the dry-run artifacts (see roofline.py)
 
 Artifacts: benchmarks/artifacts/<name>.json (+ printed tables).
@@ -224,6 +230,115 @@ def bench_fig4_strong_scaling(device_counts=(1, 2, 4, 8)):
         for r in rows:
             r["speedup"] = base / r["total_s"]
     _save("fig4_strong_scaling", rows)
+    return rows
+
+
+# ------------------------------------------------------------------ dist scale
+
+
+_DIST_SCALE_SNIPPET = r"""
+import os, json, time, sys
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.graph import datasets
+from repro.core.louvain import LouvainConfig, louvain
+from repro.core.distributed import distributed_louvain
+nd = int(sys.argv[1])
+lg = datasets.load(sys.argv[2])
+g = lg.graph
+mesh = Mesh(np.array(jax.devices()[:nd]).reshape(nd), ("data",))
+rs = distributed_louvain(g, mesh, coarsening="shard_local")     # warm compile
+t0 = time.time()
+rs = distributed_louvain(g, mesh, coarsening="shard_local")
+t_shard = time.time() - t0
+rr = distributed_louvain(g, mesh, coarsening="replicated")      # warm compile
+t0 = time.time()
+rr = distributed_louvain(g, mesh, coarsening="replicated")
+t_repl = time.time() - t0
+rl = louvain(g, LouvainConfig())
+# bit-identical: shard-local == replicated oracle == local fused driver
+assert np.array_equal(rs.labels, rr.labels)
+assert np.array_equal(rs.labels, np.asarray(rl.labels))
+assert rs.modularity == rr.modularity == float(rl.modularity)
+assert rs.sweeps_per_level == rr.sweeps_per_level == rl.sweeps_per_level
+assert rs.n_comm_per_level == rr.n_comm_per_level == rl.n_comm_per_level
+assert not rs.run_report.degradations
+# comm-bytes counter: the per-level collective payload must stay
+# O(boundary + communities), never the replicated all_gather's O(m)
+cs = rs.comm_stats
+rep_bytes = cs["bytes_per_level_model"]["replicated"]
+assert all(b < rep_bytes for b in cs["actual_bytes_per_level"])
+# fig4-style phase split from the per-level reference driver
+distributed_louvain(g, mesh, pipeline_fused=False)              # warm
+t0 = time.time()
+rp = distributed_louvain(g, mesh, pipeline_fused=False)
+t_pl = time.time() - t0
+m_pad, h_cap = cs["m_pad"], cs["halo_cap"]
+print(json.dumps({
+    "devices": nd, "graph": sys.argv[2],
+    "V": int(lg.n), "E": int(lg.m_undirected),
+    "shard_local_total_s": t_shard, "replicated_total_s": t_repl,
+    "per_level_total_s": t_pl,
+    "phases_fused": dict(rs.timer.totals),
+    "phases_per_level": dict(rp.timer.totals),
+    "modularity": rs.modularity, "levels": rs.levels,
+    "m_pad": m_pad, "halo_cap": h_cap,
+    "agg_rows_per_device_shard_local": m_pad + nd * h_cap,
+    "agg_rows_per_device_replicated": nd * m_pad,
+    "comm_bytes_model": cs["bytes_per_level_model"],
+    "actual_bytes_per_level": cs["actual_bytes_per_level"],
+    "gathered_groups_per_level": cs["gathered_groups_per_level"],
+    "halo_labels": cs["halo_labels"],
+    "partition_stats": rs.partition_stats,
+    "bit_identical": True,
+}))
+"""
+
+
+def bench_dist_scale(device_counts=(1, 2, 4, 8), dataset="com-dblp"):
+    """Shard-local coarsening scale-out (DESIGN.md §Distributed pipeline):
+    per device count, bit-identical check (shard_local vs replicated oracle
+    vs local fused driver), the measured collective payload vs the
+    replicated all_gather baseline, and the per-device aggregation-work
+    trend that carries the weak-scaling claim on emulated meshes."""
+    rows = []
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    for nd in device_counts:
+        p = subprocess.run([sys.executable, "-c", _DIST_SCALE_SNIPPET,
+                            str(nd), dataset],
+                           capture_output=True, text=True, env=env, cwd=REPO,
+                           timeout=1800)
+        if p.returncode != 0:
+            print(f"[dist_scale] devices={nd} FAILED\n{p.stderr[-800:]}")
+            continue
+        rec = json.loads(p.stdout.strip().splitlines()[-1])
+        rows.append(rec)
+        model = rec["comm_bytes_model"]
+        print(f"[dist_scale] devices={nd:2d} "
+              f"shard_local={rec['shard_local_total_s']:6.2f}s "
+              f"replicated={rec['replicated_total_s']:6.2f}s "
+              f"Q={rec['modularity']:.4f} "
+              f"agg_rows/dev={rec['agg_rows_per_device_shard_local']:,d} "
+              f"(repl {rec['agg_rows_per_device_replicated']:,d})  "
+              f"bytes/level model shard={model['shard_local']:,d} "
+              f"repl={model['replicated']:,d} "
+              f"actual={rec['actual_bytes_per_level']}")
+        pq = rec["partition_stats"]
+        print(f"    partition imbalance={pq['imbalance']:.3f} "
+              f"cut={pq['cut_fraction']:.1%} halo_factor={pq['halo_factor']:.2f} "
+              f"ghosts={pq['total_ghosts']:,d}  "
+              f"phases={ {k: round(v, 3) for k, v in rec['phases_per_level'].items()} }")
+    # weak-scaling invariant: per-device aggregation work shrinks with the
+    # mesh (m_pad ~ m/D while the merge stays O(D * h_cap))
+    if len(rows) >= 2:
+        assert (rows[-1]["agg_rows_per_device_shard_local"]
+                < rows[0]["agg_rows_per_device_shard_local"]), \
+            "per-device aggregation work did not shrink with the mesh"
+    # smoke runs (REPRO_DATASET_SCALE set) must not clobber the committed
+    # full-scale baseline artifact
+    suffix = "_smoke" if os.environ.get("REPRO_DATASET_SCALE") else ""
+    _save(f"BENCH_dist_scale{suffix}", rows)
     return rows
 
 
@@ -490,6 +605,7 @@ ALL = {
     "aggregation": bench_aggregation,
     "batch_serve": bench_batch_serve,
     "serve_resilience": bench_serve_resilience,
+    "dist_scale": bench_dist_scale,
     "roofline": bench_roofline,
 }
 

@@ -210,12 +210,33 @@ def _chunks(idxs: List[int], max_slots: int):
         yield idxs[k:k + max_slots]
 
 
+def _schedule_lanes(graphs, idxs: List[int]) -> List[int]:
+    """Order a bucket's lanes by predicted sweep count before chunking.
+
+    A vmapped while_loop runs every lane of a chunk until its SLOWEST lane
+    converges, so mixing one dense graph with seven sparse ones makes the
+    sparse lanes idle through the dense lane's extra sweeps/levels.  Sweep
+    and level counts grow with edge count (and, secondarily, vertex count),
+    so sorting a bucket descending by ``(m_valid, n_valid)`` packs
+    similar-cost graphs into the same ``max_slots`` chunk and confines the
+    lockstep waste to the one chunk that actually holds the heavy graphs.
+    Pure reordering of which chunk a graph lands in: per-graph results are
+    positionally realigned by index and bit-identical either way
+    (tests/test_batch.py).
+    """
+    return sorted(idxs, key=lambda i: (-int(graphs[i].m_valid),
+                                       -int(graphs[i].n_valid), i))
+
+
 def louvain_batch(graphs: Sequence[Graph],
                   cfg: LouvainConfig = LouvainConfig(),
                   max_slots: int = MAX_SLOTS,
-                  deadline_s: Optional[float] = None) -> List[LouvainResult]:
+                  deadline_s: Optional[float] = None,
+                  lane_schedule: bool = True) -> List[LouvainResult]:
     """Run Louvain over many graphs with one dispatch per capacity bucket
-    (buckets wider than ``max_slots`` are chunked — see ``MAX_SLOTS``).
+    (buckets wider than ``max_slots`` are chunked — see ``MAX_SLOTS``;
+    ``lane_schedule`` orders lanes by predicted sweep count first — see
+    ``_schedule_lanes`` — without affecting per-graph results).
 
     Results are positionally aligned with ``graphs`` and bit-identical to
     ``louvain(g, cfg)`` per graph (the parity contract the batch tests
@@ -250,6 +271,9 @@ def louvain_batch(graphs: Sequence[Graph],
 
     bad_slots: List[int] = []
     for (sig, sorted_by), idxs in buckets.items():
+        if lane_schedule and len(idxs) > max_slots:
+            telemetry.bump("batch.lane_scheduled_buckets")
+            idxs = _schedule_lanes(graphs, idxs)
         for chunk in _chunks(idxs, max_slots):
             if deadline is not None and deadline.expired:
                 raise DeadlineError(
@@ -353,13 +377,14 @@ def _plp_batch_fn(sig: CapacitySignature, spec: EngineSpec):
 def plp_batch(graphs: Sequence[Graph],
               cfg: PLPConfig = PLPConfig(),
               max_slots: int = MAX_SLOTS,
-              deadline_s: Optional[float] = None) -> List[PLPResult]:
+              deadline_s: Optional[float] = None,
+              lane_schedule: bool = True) -> List[PLPResult]:
     """Run PLP over many graphs with one dispatch per capacity bucket —
     ``louvain_batch``'s contract (positional results, per-graph bitwise
     parity with ``plp(g, cfg)``, trivial result for zero-capacity inputs,
     per-slot RunReport, ``max_slots`` dispatch-width bound,
-    ``deadline_s`` whole-call watchdog) for the label-propagation
-    evaluator."""
+    ``deadline_s`` whole-call watchdog, ``lane_schedule`` sweep-count
+    ordering) for the label-propagation evaluator."""
     graphs = list(graphs)
     results: List[Optional[PLPResult]] = [None] * len(graphs)
     active_faults = sorted(faultinject.active())
@@ -379,6 +404,9 @@ def plp_batch(graphs: Sequence[Graph],
         buckets.setdefault((sig, g.sorted_by), []).append(i)
 
     for (sig, sorted_by), bucket_idxs in buckets.items():
+        if lane_schedule and len(bucket_idxs) > max_slots:
+            telemetry.bump("batch.lane_scheduled_buckets")
+            bucket_idxs = _schedule_lanes(graphs, bucket_idxs)
         for idxs in _chunks(bucket_idxs, max_slots):
             if deadline is not None and deadline.expired:
                 raise DeadlineError(

@@ -511,7 +511,7 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
 
 
 def make_distributed_step(spec: EngineSpec, axes, n: int, src, dst, w, emask,
-                          deg, vol_v, vmask):
+                          deg, vol_v, vmask, restrict=None):
     """Build one sweep step over a LOCAL edge shard (for use inside a
     shard_map worker): evaluate on local in-edges, psum-merge the disjoint
     per-owner proposals, gate, adopt, frontier.
@@ -519,8 +519,11 @@ def make_distributed_step(spec: EngineSpec, axes, n: int, src, dst, w, emask,
     ``emask`` is the per-device ownership mask: every vertex's in-edges must
     be owned by exactly one device (dst-disjoint ownership), so the psum
     merge is a pure union.  ``deg``/``vol_v`` are the per-level Louvain
-    invariants (ignored by PLP).  Reused by both the per-level distributed
-    phase and the fused multi-level pipeline (DESIGN.md §Pipeline).
+    invariants (ignored by PLP).  ``restrict`` (replicated int32[n] or None)
+    confines Louvain moves to vertices sharing its value — the Leiden
+    refinement mask, mirroring ``_evaluate_segment``.  Reused by both the
+    per-level distributed phase and the fused multi-level pipeline
+    (DESIGN.md §Pipeline).
     """
     mult, salt = _GATE_CONST[spec.evaluator]
 
@@ -535,6 +538,10 @@ def make_distributed_step(spec: EngineSpec, axes, n: int, src, dst, w, emask,
         else:
             # replicated O(n) recompute — identical on all devices, no comm
             vol_com, size_com = moves.community_aux(labels, deg, vmask, n)
+            if restrict is not None:
+                same_macro = (restrict[jnp.clip(src, 0, n - 1)]
+                              == restrict[jnp.clip(dst, 0, n - 1)])
+                valid = valid & same_macro
             best_gain, best_cand = moves.louvain_best_moves(
                 src, dst, w, valid, labels, deg, vol_com, size_com, vol_v,
                 n, singleton_rule=spec.singleton_rule)

@@ -74,6 +74,15 @@ ENGINE_FAULTS = ("oscillation", "vmem_starve")
 # trade speed, never results.
 BACKEND_DESCENT = {"pallas": "ell", "ell": "segment"}
 
+# Sweep-counter stride per level and the refinement phase's offset within a
+# level: level L's local-moving phase hashes tie noise / Luby gates from
+# it0 = L·LEVEL_IT_STRIDE, Leiden refinement from it0 + REFINE_IT_OFFSET.
+# Shared with core.distributed so every driver (local per-level, local fused,
+# distributed replicated, distributed shard-local) draws the SAME per-sweep
+# randomness — a precondition of the bit-for-bit parity contracts.
+LEVEL_IT_STRIDE = 1000
+REFINE_IT_OFFSET = 500
+
 
 # ------------------------------------------------------------ capacity schedule
 
@@ -385,7 +394,7 @@ def _build_stage(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
             # "converged" wrong answer), so every level checks its input
             lvl_bad = jnp.any(cur.edge_mask & ~jnp.isfinite(cur.w))
             vmask = cur.vertex_mask()
-            it0 = level_u32 * jnp.uint32(1000)
+            it0 = level_u32 * jnp.uint32(LEVEL_IT_STRIDE)
             com, _, sweeps, dn_h, _act_h = device_phase(
                 spec, cur, ell, init_com, vmask, it0, seed)
             if refine_spec is None:
@@ -410,7 +419,7 @@ def _build_stage(spec0: Optional[EngineSpec], spec_coarse: EngineSpec,
                     # macro id (paper-order: refinement only when not done)
                     ref, _, _, _, _ = device_phase(
                         refine_spec, cur, None, arange_n, vmask,
-                        it0 + jnp.uint32(500), seed, restrict=com)
+                        it0 + jnp.uint32(REFINE_IT_OFFSET), seed, restrict=com)
                     new_ref, n_ref, nxt_r = aggregation.remap_and_coarsen_by(
                         agg_method, cur, ref, faults)
                     # macro seed as the CONTIGUIZED macro id (all members of
@@ -806,7 +815,7 @@ def _refine_partition(cur: Graph, com_macro: jax.Array, cfg: LouvainConfig,
     engine = SweepEngine(cur, _refine_spec(cfg, faults))
     res = engine.run_phase(
         *engine.singleton_state(),
-        it0=level * 1000 + 500, seed=cfg.seed,
+        it0=level * LEVEL_IT_STRIDE + REFINE_IT_OFFSET, seed=cfg.seed,
         restrict=com_macro, fused=cfg.fused,
     )
     return res.labels
@@ -964,7 +973,7 @@ def _louvain_per_level(g: Graph, cfg: LouvainConfig,
         # local-moving phase converges on device before anything syncs back
         with _tphase(timer, "local_moving", level, cfg.per_level_timing):
             res = engine.run_phase(
-                com, need, it0=level * 1000, seed=cfg.seed, fused=cfg.fused)
+                com, need, it0=level * LEVEL_IT_STRIDE, seed=cfg.seed, fused=cfg.fused)
         com = res.labels
         sweeps_per_level.append(res.sweeps)
         delta_n_per_level.append(res.delta_n_history)

@@ -9,7 +9,7 @@ TPU analogue of Chapel's block-distributed arrays over locales.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple
 
 import numpy as np
 
@@ -80,20 +80,125 @@ def partition_edges_by_dst(g: Graph, n_devices: int) -> EdgePartition:
     )
 
 
-def partition_quality(p: EdgePartition) -> Tuple[float, float]:
-    """(load imbalance = max/mean edge count, fraction of cut edges).
+def owner_of_vertices(p: EdgePartition) -> np.ndarray:
+    """int32[n_max]: owning device of each vertex id under the contiguous
+    dst-range ownership (``vertex_bounds``); ids past the last bound clamp
+    onto the last device."""
+    own = np.searchsorted(p.vertex_bounds, np.arange(p.n_max), side="right") - 1
+    return np.clip(own, 0, p.n_devices - 1).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloTable:
+    """Per-device ghost-vertex (halo) tables for one edge partition.
+
+    Device d owns the vertices in ``[vertex_bounds[d], vertex_bounds[d+1])``
+    and all edges INTO them; the srcs of those edges that live OUTSIDE the
+    owned range are d's GHOSTS — the boundary vertices whose labels (and,
+    for Louvain, whose community volumes) d must receive each sweep.  The
+    halo therefore bounds the information-theoretically necessary per-level
+    label exchange: ``sum(ghost_counts)`` label words per refresh, versus
+    the full O(m) edge payload a gather-then-replicate level loop moves.
+
+    ``ghost_ids`` is padded to a common static width (``n_max`` sentinel,
+    ``ghost_mask`` valid) so the table can be shipped to devices as one
+    rectangular array when a mesh wants explicit halo gathers.
+    """
+
+    n_devices: int
+    owner_of: np.ndarray     # int32[n_max]
+    ghost_counts: np.ndarray  # int64[D] — distinct non-owned srcs per device
+    ghost_ids: np.ndarray    # int32[D, g_pad] (sentinel n_max where invalid)
+    ghost_mask: np.ndarray   # bool[D, g_pad]
+    g_pad: int
+
+    @property
+    def total_ghosts(self) -> int:
+        return int(self.ghost_counts.sum())
+
+
+def build_halo(p: EdgePartition) -> HaloTable:
+    """Build the ghost/halo tables for an edge partition.
+
+    Degenerate meshes fall out naturally: a single-device partition has no
+    ghosts (every src is owned), and an empty shard (a device whose edge
+    slice is all padding) has an empty ghost row.
+    """
+    owner = owner_of_vertices(p)
+    ghosts = []
+    for d in range(p.n_devices):
+        s = p.src[d][p.edge_mask[d]]
+        g = np.unique(s[owner[s] != d]) if s.size else np.zeros(0, np.int64)
+        ghosts.append(g.astype(np.int32))
+    counts = np.array([g.size for g in ghosts], dtype=np.int64)
+    g_pad = max(1, int(counts.max()) if p.n_devices else 1)
+    ids = np.full((p.n_devices, g_pad), p.n_max, dtype=np.int32)
+    mask = np.zeros((p.n_devices, g_pad), dtype=bool)
+    for d, g in enumerate(ghosts):
+        ids[d, : g.size] = g
+        mask[d, : g.size] = True
+    return HaloTable(
+        n_devices=p.n_devices,
+        owner_of=owner,
+        ghost_counts=counts,
+        ghost_ids=ids,
+        ghost_mask=mask,
+        g_pad=g_pad,
+    )
+
+
+class PartitionQuality(NamedTuple):
+    """Partition health metrics (DESIGN.md §6), all host-side numpy.
+
+    ``imbalance``     max/mean per-device edge count (1.0 = perfect);
+    ``cut_fraction``  fraction of edges whose src is owned elsewhere — the
+                      label-exchange edges of the distributed sweep;
+    ``halo_factor``   replication factor ``sum_d(owned_d + ghosts_d) / n``:
+                      1.0 means no vertex state is ghosted anywhere, D means
+                      every device ghosts every foreign vertex;
+    ``max_halo_fraction``  worst single device's ghosts / its owned count
+                      (the per-device halo memory overhead bound);
+    ``total_ghosts``  sum of per-device distinct ghost vertices — the
+                      per-level halo-label payload in words.
+    """
+
+    imbalance: float
+    cut_fraction: float
+    halo_factor: float
+    max_halo_fraction: float
+    total_ghosts: int
+
+
+def partition_quality(p: EdgePartition,
+                      halo: HaloTable | None = None) -> PartitionQuality:
+    """Edge balance, cut fraction and halo/replication factor of a partition.
 
     A cut edge is one whose src is owned by a different device than its dst —
-    these are the label-exchange edges in the distributed sweep.
+    these are the label-exchange edges in the distributed sweep.  The halo
+    terms quantify the ghost-vertex state the shard-local pipeline keeps per
+    device (``build_halo``) — surfaced in ``DistLouvainResult`` telemetry
+    and the ``dist_scale`` benchmark.
     """
+    if halo is None:
+        halo = build_halo(p)
     counts = p.edge_mask.sum(axis=1).astype(np.float64)
     imbalance = float(counts.max() / max(1.0, counts.mean()))
-    owner_of = np.searchsorted(p.vertex_bounds, np.arange(p.n_max), side="right") - 1
     cut = 0
     total = 0
     for d in range(p.n_devices):
         mask = p.edge_mask[d]
         s = p.src[d][mask]
-        cut += int(np.sum(owner_of[s] != d))
+        cut += int(np.sum(halo.owner_of[s] != d))
         total += int(mask.sum())
-    return imbalance, (cut / total if total else 0.0)
+    owned = np.maximum(np.diff(p.vertex_bounds).astype(np.float64), 0.0)
+    n_live = max(1.0, float(p.vertex_bounds[-1]))
+    halo_factor = float((owned.sum() + halo.ghost_counts.sum()) / n_live)
+    max_halo_fraction = float(
+        (halo.ghost_counts / np.maximum(owned, 1.0)).max()) if p.n_devices else 0.0
+    return PartitionQuality(
+        imbalance=imbalance,
+        cut_fraction=(cut / total if total else 0.0),
+        halo_factor=halo_factor,
+        max_halo_fraction=max_halo_fraction,
+        total_ghosts=halo.total_ghosts,
+    )

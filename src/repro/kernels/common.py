@@ -220,6 +220,59 @@ def capacity_signature(n_cap: int, m_cap: int,
     return CapacitySignature(nb, mb, int(ell_width), tuple(schedule))
 
 
+# ------------------------------------------------------- distributed capacity
+
+# Per-shard partial-coarsen capacity floor: below this the fixed-cost terms
+# (collective latency, program dispatch) dominate any memory win, so shards
+# never shrink their partial-edge buffers past it.
+HALO_CAP_FLOOR = 256
+
+
+def pick_halo_cap(m_pad: int, n_devices: int) -> int:
+    """Static per-shard capacity for partial coarse edge lists (DESIGN.md §6).
+
+    Each device's partial coarsening of its local shard emits at most
+    ``m_pad`` distinct (community, community) edges, but real graphs shrink
+    ≥4× per level; half the shard capacity is a comfortable bound with a 2×
+    memory/communication win.  The merged coarse capacity is then
+    ``n_devices · cap`` — the gathered partial lists — which replaces the
+    replicated ``n_devices · m_pad`` edge list.  Overflow past the cap is
+    detected on device (a psum'd flag) and handled by the host degradation
+    ladder (retry with replicated coarsening), so the cap affects memory and
+    communication, never results.  Sublane-aligned like ``m_pad`` itself.
+    """
+    if m_pad <= 0 or n_devices <= 0:
+        raise ValueError(f"need positive m_pad/n_devices, got {m_pad}/{n_devices}")
+    cap = max(HALO_CAP_FLOOR, m_pad // 2)
+    # never exceed the shard capacity itself: partial lists are static
+    # [:cap] slices of m_pad-length buffers
+    return min(int(m_pad), int(cdiv(cap, 8) * 8))
+
+
+# Wire-format byte widths for the comm model: one edge is (src:int32,
+# dst:int32, w:float32) plus a 1-byte validity mask; one label word is int32.
+EDGE_WIRE_BYTES = 13
+LABEL_WIRE_BYTES = 4
+
+
+def dist_comm_bytes_per_level(n: int, m_pad: int, h_cap: int,
+                              n_devices: int) -> dict:
+    """Analytic per-level collective payload (bytes) of both coarsening modes.
+
+    ``replicated`` moves the full padded edge list to every device once
+    (the gather-then-replicate baseline: D·m_pad edges on the wire);
+    ``shard_local`` moves only the two-phase contiguization table (n label
+    words + D stripe counts) and the gathered partial coarse lists
+    (D·h_cap edges) — O(boundary + communities), not O(m).
+    """
+    return {
+        "replicated": n_devices * m_pad * EDGE_WIRE_BYTES,
+        "shard_local": (n * LABEL_WIRE_BYTES
+                        + n_devices * LABEL_WIRE_BYTES
+                        + n_devices * h_cap * EDGE_WIRE_BYTES),
+    }
+
+
 # ---------------------------------------------------------------- aggregation
 
 BIN_IMPLS = ("auto", "kernel", "ref")
